@@ -1,0 +1,117 @@
+import os
+if "--child" in __import__("sys").argv:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+"""Measured multi-device microbenchmarks (8 forced host devices).
+
+Invoked by benchmarks/run.py as a SUBPROCESS (``--child``) so the main
+process keeps its single-device view.  CPU 'ICI' has no async DMA engine,
+so interleaved modes measure the schedule's pure overhead here; the
+``derived`` column carries the cost model's TPU v5e prediction, and the
+dist test suite checks numerical equivalence.  What IS physically measured
+on CPU: per-message costs (the paper's latency-dominance effect) and the
+bulk-vs-chunked message-count tradeoff.
+"""
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import cost_model as cm
+from repro.core import managed
+from repro.core import halo
+from repro.parallel.sharding import smap
+
+REPS = 10
+
+
+def _time(fn, *args) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / REPS
+
+
+def bench_managed_collectives(mesh) -> list[tuple[str, float, str]]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for mb in (1, 8):
+        x = jnp.asarray(rng.normal(size=(8 * mb * 32768, 4))
+                        .astype(np.float32))          # mb MiB per shard
+        for mode, chunks in (("bulk", 1), ("interleaved", 1),
+                             ("interleaved", 4)):
+            fn = jax.jit(smap(
+                lambda a: managed.managed_all_gather(a, "x", mode, chunks),
+                mesh, in_specs=(P("x"),), out_specs=P(None)))
+            t = _time(fn, x)
+            d = cm.decide(int(x.nbytes // 8), 8, compute_time_s=0.0)
+            rows.append((f"ag_{mb}MiB_{mode}{chunks}", t * 1e6,
+                         f"v5e_bulk={d.comm_time_s*1e6:.0f}us"))
+    return rows
+
+
+def bench_pingpong(mesh) -> list[tuple[str, float, str]]:
+    """Measured PingPong between 2 of the 8 devices: one bulk message vs
+    n_msg chunked messages (the paper's fine-grained limit)."""
+    rows = []
+    perm = [(0, 1), (1, 0)]
+    n = 4096
+    x = jnp.arange(8 * n, dtype=jnp.float32)
+
+    def bulk(a):
+        return lax.ppermute(a, "x", perm)
+
+    def chunked(n_msg):
+        def fn(a):
+            pieces = jnp.split(a, n_msg)
+            return jnp.concatenate(
+                [lax.ppermute(p, "x", perm) for p in pieces])
+        return fn
+
+    t_bulk = _time(jax.jit(smap(bulk, mesh, in_specs=(P("x"),),
+                                out_specs=P("x"))), x)
+    rows.append(("pingpong_bulk_4096el", t_bulk * 1e6, ""))
+    for n_msg in (4, 16, 64):
+        t = _time(jax.jit(smap(chunked(n_msg), mesh, in_specs=(P("x"),),
+                               out_specs=P("x"))), x)
+        rows.append((f"pingpong_{n_msg}msgs", t * 1e6,
+                     f"x{t / t_bulk:.2f} (latency-dominance, paper Fig5a)"))
+    return rows
+
+
+def bench_jacobi(mesh) -> list[tuple[str, float, str]]:
+    """The paper's Jacobi example: bulk (Fig 2) vs intermingled (Fig 3)
+    halo schedules, distributed over 8 shards."""
+    rows = []
+    rng = np.random.default_rng(1)
+    u = jnp.asarray(rng.normal(size=(1024, 514)).astype(np.float32))
+    f = jnp.asarray(rng.normal(size=(1024, 514)).astype(np.float32))
+    for mode in ("bulk", "interleaved"):
+        fn = jax.jit(smap(
+            lambda a, b, mode=mode: halo.jacobi_solve(a, b, "x", 10, mode),
+            mesh, in_specs=(P("x"), P("x")), out_specs=P("x")))
+        t = _time(fn, u, f)
+        rows.append((f"jacobi_10sweeps_{mode}", t * 1e6, ""))
+    return rows
+
+
+def main_child() -> None:
+    mesh = jax.make_mesh((8,), ("x",))
+    rows = []
+    rows += bench_managed_collectives(mesh)
+    rows += bench_pingpong(mesh)
+    rows += bench_jacobi(mesh)
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__" and "--child" in sys.argv:
+    main_child()

@@ -1,0 +1,55 @@
+"""§Perf comparison tables: baseline vs experiment cells.
+
+Reads results/dryrun.json (baselines) + results/perf.json (experiments)
+and prints per-cell roofline terms plus two schedule bounds:
+
+  serialized bound  = compute + collective       (bulk: the consumer matmul
+                      waits for the whole collective)
+  overlapped bound  = max(compute, collective)   (interleaved rings / async)
+
+The paper's technique does not change collective BYTES — it changes which
+bound applies; the beyond-paper mesh re-roling changes the bytes too.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline import model_flops_per_chip, roofline_row
+
+CELLS = ("granite-34b|train_4k", "nemotron-4-340b|train_4k",
+         "moonshot-v1-16b-a3b|train_4k")
+
+
+def load(*paths: str) -> dict:
+    out = {}
+    for p in paths:
+        if os.path.exists(p):
+            with open(p) as f:
+                out.update(json.load(f))
+    return out
+
+
+def report(paths=("results/dryrun.json", "results/perf.json")) -> None:
+    results = load(*paths)
+    hdr = (f'{"cell":52s} {"comp_s":>8s} {"mem_s":>8s} {"coll_s":>8s} '
+           f'{"serial":>8s} {"overlap":>8s} {"frac":>6s} {"useful":>7s}')
+    print(hdr)
+    for cell in CELLS:
+        rows = [(k, v) for k, v in sorted(results.items())
+                if k.startswith(cell) and v.get("status") == "ok"
+                and "2x16x16" not in k]
+        for key, rec in rows:
+            r = roofline_row(rec)
+            serial = r["compute_s"] + r["collective_s"]
+            overlap = max(r["compute_s"], r["collective_s"])
+            print(f'{key:52s} {r["compute_s"]:8.2f} {r["memory_s"]:8.2f} '
+                  f'{r["collective_s"]:8.2f} {serial:8.2f} {overlap:8.2f} '
+                  f'{r["roofline_fraction"]:6.3f} '
+                  f'{r["model_over_hlo_flops"]:7.2f}')
+        print()
+
+
+if __name__ == "__main__":
+    report()

@@ -1,0 +1,159 @@
+"""§Roofline report: three terms per (arch x shape) cell from the dry-run
+artifact (results/dryrun.json), TPU v5e constants.
+
+  compute term     = flops_per_chip / peak_FLOP/s
+  memory term      = hbm_bytes_per_chip / HBM_bw
+  collective term  = collective_link_bytes_per_chip / link_bw
+
+flops/hbm come from the loop-weighted HLO analyzer (launch/hlo.py) — the
+raw cost_analysis() counts while-bodies once and is recorded alongside.
+MODEL_FLOPS = 6*N_active*tokens (train) / 2*N_active*tokens (inference),
+per chip; the ratio against HLO flops exposes remat/dispatch waste.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs.base import SHAPES
+from repro.core.cost_model import TPU_V5E
+
+
+def model_flops_per_chip(rec: dict) -> float:
+    shape = SHAPES[rec["shape"]]
+    n_active = rec["active_params"]
+    chips = rec["n_chips"]
+    if rec["kind"] == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / chips
+    if rec["kind"] == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / chips
+    tokens = shape.global_batch            # one token per sequence
+    return 2.0 * n_active * tokens / chips
+
+
+def analytic_mem_gib(rec: dict, hw=TPU_V5E) -> float:
+    """Analytic per-chip HBM model for the TPU target.  The dry-run's
+    memory_analysis() comes from the CPU backend, whose list scheduler is
+    not memory-aware (it interleaves all layers' remat recomputes), so for
+    big cells it wildly over-reports peaks the TPU scheduler would never
+    see.  This model counts what MUST be resident:
+
+      params/chip + optimizer moments (train) + grads (train)
+      + saved scan carries (remat) + one layer's working set
+      + KV cache (decode) / collected cache (prefill).
+    """
+    from repro import configs
+    shape = SHAPES[rec["shape"]]
+    cfg = configs.get_config(rec["arch"])
+    chips = rec["n_chips"]
+    p_bytes = rec["params"] * 2 / chips
+    d = cfg.d_model
+    total = p_bytes
+    if rec["kind"] == "train":
+        mom = 2 if cfg.moment_dtype == "bfloat16" else 4
+        total += rec["params"] * 2 * mom / chips      # mu, nu
+        total += p_bytes                               # grad buffer
+        b_loc = shape.global_batch // (chips // 16)    # data-axis shard
+        b_micro = max(1, b_loc // max(cfg.accum_steps, 1))
+        s_loc = shape.seq_len // 16
+        total += cfg.n_layers * b_micro * s_loc * d * 2       # scan carries
+        total += 6 * b_micro * shape.seq_len * d * 2          # working set
+    elif rec["kind"] == "prefill":
+        b_loc = shape.global_batch // (chips // 16)
+        kvp = max(cfg.n_kv_heads, 1)
+        hd = cfg.head_dim if cfg.n_heads else 0
+        total += (cfg.n_layers * b_loc * (shape.seq_len // 16)
+                  * 2 * kvp * hd * 2)                         # cache out
+        total += 8 * b_loc * shape.seq_len * d * 2            # working set
+    else:                                                     # decode
+        n_sh = chips
+        kvp = max(cfg.n_kv_heads, 1)
+        hd = cfg.head_dim if cfg.n_heads else 0
+        layers_full = cfg.n_layers
+        win = cfg.sliding_window
+        if cfg.family == "hybrid" and win:
+            n_glob = len(cfg.full_attn_layers)
+            cache = (n_glob * shape.seq_len + (cfg.n_layers - n_glob)
+                     * min(win, shape.seq_len))
+        elif cfg.family == "ssm":
+            cache = 0
+        else:
+            cache = layers_full * shape.seq_len
+        total += cache / n_sh * shape.global_batch * 2 * kvp * hd * 2
+        if cfg.ssm is not None:
+            total += (cfg.n_layers * shape.global_batch * cfg.ssm_heads
+                      * cfg.ssm.headdim * cfg.ssm.d_state * 4 / 16)
+    return total / 2**30
+
+
+def roofline_row(rec: dict, hw=TPU_V5E) -> dict:
+    ct = rec["flops_per_chip"] / hw.peak_flops
+    mt = rec["hbm_bytes_per_chip"] / hw.hbm_bw
+    lt = rec["collective_bytes_per_chip"] / hw.link_bw
+    terms = {"compute": ct, "memory": mt, "collective": lt}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_chip(rec)
+    util = mf / max(rec["flops_per_chip"], 1e-30)
+    bound = max(ct, mt, lt)
+    if rec["kind"] == "decode":
+        # decode is inherently bandwidth-bound: the roofline fraction is
+        # ideal-bytes (params + cache read once per token) over HLO bytes
+        ideal = (rec["params"] * 2 / rec["n_chips"]
+                 + analytic_mem_gib(rec, hw) * 2**30)
+        frac = ideal / max(rec["hbm_bytes_per_chip"], 1e-30)
+    else:
+        # useful-compute time over the binding term
+        frac = (mf / hw.peak_flops) / max(bound, 1e-30)
+    return {
+        "cell": f'{rec["arch"]}|{rec["shape"]}|{rec["mesh"]}',
+        "compute_s": ct, "memory_s": mt, "collective_s": lt,
+        "dominant": dominant, "model_flops_per_chip": mf,
+        "model_over_hlo_flops": util, "roofline_fraction": frac,
+        "peak_mem_gib": rec.get("memory", {}).get("peak_bytes", 0) / 2**30,
+        "mem_model_gib": analytic_mem_gib(rec, hw),
+    }
+
+
+def report(path: str = "results/dryrun.json",
+           mesh: str = "16x16") -> list[dict]:
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    for key, rec in sorted(results.items()):
+        if rec.get("status") != "ok" or rec.get("mesh") != mesh:
+            continue
+        rows.append(roofline_row(rec))
+    return rows
+
+
+def rows_as_csv(rows: list[dict]) -> list[tuple[str, float, str]]:
+    out = []
+    for r in rows:
+        out.append((f'roofline_{r["cell"]}',
+                    r[r["dominant"] + "_s"] * 1e6,
+                    f'dom={r["dominant"]} frac={r["roofline_fraction"]:.3f} '
+                    f'useful={r["model_over_hlo_flops"]:.2f} '
+                    f'mem={r["peak_mem_gib"]:.1f}GiB'))
+    return out
+
+
+def print_table(rows: list[dict]) -> None:
+    hdr = (f'{"cell":44s} {"compute_s":>10s} {"memory_s":>10s} '
+           f'{"collect_s":>10s} {"dominant":>10s} {"useful":>7s} '
+           f'{"frac":>6s} {"cpu GiB":>8s} {"tpu GiB":>8s}')
+    print(hdr)
+    for r in rows:
+        print(f'{r["cell"]:44s} {r["compute_s"]:10.4f} '
+              f'{r["memory_s"]:10.4f} {r["collective_s"]:10.4f} '
+              f'{r["dominant"]:>10s} {r["model_over_hlo_flops"]:7.2f} '
+              f'{r["roofline_fraction"]:6.3f} {r["peak_mem_gib"]:8.2f} '
+              f'{r["mem_model_gib"]:8.2f}')
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    print_table(report(mesh=mesh))

@@ -1,0 +1,81 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+"""The paper's running example: a 2-D Jacobi sweep with MDMP-managed halo
+exchange, distributed over 8 (forced host) devices.
+
+    PYTHONPATH=src python examples/jacobi_mdmp.py
+
+Shows the full MDMP workflow from the paper's Figure 4:
+  1. declare the communication (CommRegion directives),
+  2. let the region instrument the computation (trace-time read/write
+     analysis) and plan each message (alpha-beta model),
+  3. run with the planned schedule — bulk (paper Fig 2) vs intermingled
+     (paper Fig 3) — and check they agree.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import CommRegion, halo
+from repro.core import cost_model as cm
+from repro.kernels.stencil import jacobi_step_pallas
+from repro.parallel.sharding import smap
+
+
+def main() -> None:
+    mesh = jax.make_mesh((8,), ("x",))
+    m, n = 1024, 514                       # global grid, rows sharded
+    rng = np.random.default_rng(0)
+    u0 = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    f = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+
+    # 1-2. declare + plan (the paper's #pragma commregion block)
+    region = CommRegion("jacobi", axis_sizes={"x": 8})
+    region.send("halo_up", axis="x", shape=(n,), dtype=np.float32)
+    region.send("halo_down", axis="x", shape=(n,), dtype=np.float32)
+    local = (m // 8, n)
+
+    def shard_compute(u, ff):            # the per-shard stencil the halos
+        return 0.25 * (u[:-2, 1:-1] + u[2:, 1:-1]      # must overlap with
+                       + u[1:-1, :-2] + u[1:-1, 2:] - ff[1:-1, 1:-1])
+
+    plan = region.plan(
+        shard_compute,
+        jax.ShapeDtypeStruct(local, jnp.float32),
+        jax.ShapeDtypeStruct(local, jnp.float32),
+        compute_time_s=5.0 * local[0] * local[1] / cm.TPU_V5E.peak_flops)
+    print(plan.summary())
+
+    # 3. run both schedules
+    outs = {}
+    for mode in ("bulk", "interleaved"):
+        fn = jax.jit(smap(
+            lambda u, ff, mode=mode: halo.jacobi_solve(u, ff, "x", 50, mode),
+            mesh, in_specs=(P("x"), P("x")), out_specs=P("x")))
+        out = fn(u0, f)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        out = fn(u0, f)
+        jax.block_until_ready(out)
+        outs[mode] = np.asarray(out)
+        print(f"{mode:12s} 50 sweeps in {time.perf_counter() - t0:.3f}s")
+    np.testing.assert_allclose(outs["bulk"], outs["interleaved"], rtol=1e-5)
+    print("bulk (Fig 2) == intermingled (Fig 3): max diff",
+          np.abs(outs["bulk"] - outs["interleaved"]).max())
+
+    # bonus: the Pallas stencil kernel on a single shard (interpret mode)
+    u_loc = u0[:m // 8 + 2]         # +2 boundary rows for the kernel
+    out = jacobi_step_pallas(u_loc, f[:m // 8 + 2], blk_m=64,
+                             blk_n=256,
+                             interpret=True)
+    print("pallas stencil kernel ok:", out.shape)
+
+
+if __name__ == "__main__":
+    main()

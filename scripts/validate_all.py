@@ -1,0 +1,71 @@
+"""Full 10-architecture distributed-equivalence sweep (the heavyweight
+version of tests/dist_suite/test_model_parallel.py):
+
+    python scripts/validate_all.py [arch ...]
+
+For every arch: single-device training == (2x2 bulk) == (2x2 interleaved
+MDMP) == (2x2x2 multipod), loss + grad-norm + updated params; ~6 min.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import dataclasses, traceback
+import jax, numpy as np
+from repro import configs
+from repro.models.model import Model
+from repro.parallel.sharding import MeshCtx
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.train.train_loop import build_train_step
+from repro.data.pipeline import DataConfig, SyntheticLMData
+
+def run(cfg, mesh_shape, axes, mode, params0, batch_np):
+    mesh = jax.make_mesh(mesh_shape, axes)
+    ctx = MeshCtx.from_mesh(mesh, mdmp_mode=mode)
+    model = Model(cfg, ctx)
+    step_fn, pshard, bshard = build_train_step(model, AdamWConfig(lr=1e-2), mesh, donate=False)
+    params = jax.tree.map(jax.device_put, params0, pshard)
+    opt = adamw_init(params, AdamWConfig())
+    batch = {k: jax.device_put(v, bshard[k]) if k in bshard else v for k, v in batch_np.items()}
+    p2, o2, m = step_fn(params, opt, batch)
+    return float(m["loss"]), float(m["grad_norm"]), jax.tree.map(np.asarray, p2)
+
+which = sys.argv[1:] or configs.list_archs()
+for arch in which:
+    cfg = dataclasses.replace(configs.get_reduced(arch), dtype="float32")
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=16.0))
+    try:
+        # init once on single device
+        m1 = jax.make_mesh((1, 1), ("data", "model"))
+        model0 = Model(cfg, MeshCtx.from_mesh(m1))
+        params0 = jax.tree.map(np.asarray, model0.init(jax.random.key(0)))
+        data = SyntheticLMData(DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4))
+        b = data.global_batch_at(0)
+        rng = np.random.default_rng(0)
+        if cfg.encoder is not None:
+            b["frames"] = rng.normal(size=(4, cfg.encoder.n_frames, cfg.d_model)).astype(np.float32)
+        if cfg.vision is not None:
+            b["patches"] = rng.normal(size=(4, cfg.vision.n_patches, cfg.d_model)).astype(np.float32)
+
+        l_ref, g_ref, p_ref = run(cfg, (1, 1), ("data", "model"), "bulk", params0, b)
+        results = [f"ref={l_ref:.4f}"]
+        for mesh_shape, axes, mode in [((2, 2), ("data", "model"), "bulk"),
+                                       ((2, 2), ("data", "model"), "interleaved"),
+                                       ((2, 2, 2), ("pod", "data", "model"), "bulk")]:
+            l, g, p2 = run(cfg, mesh_shape, axes, mode, params0, b)
+            np.testing.assert_allclose(l, l_ref, rtol=(1e-3 if cfg.moe is not None else 2e-4), err_msg=f"{arch} loss {axes} {mode} dist={l} ref={l_ref}")
+            np.testing.assert_allclose(g, g_ref, rtol=2e-3,
+                err_msg=f"{arch} gnorm dist={g} ref={g_ref}")
+            for (k1, a), (k2, bb) in zip(
+                sorted(jax.tree_util.tree_flatten_with_path(p_ref)[0], key=lambda t: str(t[0])),
+                sorted(jax.tree_util.tree_flatten_with_path(p2)[0], key=lambda t: str(t[0]))):
+                np.testing.assert_allclose(a, bb, rtol=2e-3, atol=2e-4,
+                    err_msg=f"{arch} param {k1} {mesh_shape} {mode}")
+            results.append(f"{'x'.join(map(str,mesh_shape))}/{mode[:3]} ok")
+        print(f"{arch:22s} " + "  ".join(results))
+    except Exception as e:
+        print(f"{arch:22s} FAIL: {type(e).__name__}: {str(e)[:400]}")
+        if len(which) == 1:
+            traceback.print_exc()

@@ -1,0 +1,47 @@
+"""MDMP core — the paper's contribution as a composable JAX module.
+
+Public surface:
+  * managed collectives (bulk / interleaved / auto) .......... managed.py
+  * fused comm+compute rings (AG-matmul, matmul-RS) ........... managed.py
+  * halo exchange + the paper's Jacobi schedules .............. halo.py
+  * communication regions (declarative directives) ............ region.py
+  * trace-time read/write instrumentation ..................... instrument.py
+  * alpha-beta cost model + roofline terms .................... cost_model.py
+  * as-ready gradient reduction / FSDP overlap ................ overlap.py
+  * runtime schedule tuner ..................................... tuner.py
+"""
+
+from repro.core.cost_model import (DEFAULT_HW, HECTOR_XE6, HELIOS_BULLX,
+                                   JUQUEEN_BGQ, TPU_V5E, HardwareModel,
+                                   RooflineTerms, crossover_compute_per_element,
+                                   decide, roofline)
+from repro.core.halo import (halo_exchange, jacobi_solve, jacobi_step_bulk,
+                             jacobi_step_overlapped)
+from repro.core.instrument import AccessRecord, RegionReport, analyze_region
+from repro.core.managed import (DecisionRecord, MDMPConfig,
+                                all_gather_matmul, clear_decision_log,
+                                decision_log, get_config, managed_all_gather,
+                                managed_all_reduce, managed_all_to_all,
+                                managed_psum_scatter_gather,
+                                managed_reduce_scatter, matmul_reduce_scatter,
+                                use_config)
+from repro.core.overlap import (bucketed_all_reduce, fsdp_gather,
+                                fsdp_gather_tree, grad_accumulate,
+                                reduce_replicated_grads)
+from repro.core.region import CommRegion, CommSpec, Plan, PlanEntry
+from repro.core.tuner import ScheduleTuner, TunerEntry, call_site_key
+
+__all__ = [
+    "AccessRecord", "CommRegion", "CommSpec", "DEFAULT_HW", "DecisionRecord",
+    "HardwareModel", "HECTOR_XE6", "HELIOS_BULLX", "JUQUEEN_BGQ",
+    "MDMPConfig", "Plan", "PlanEntry", "RegionReport", "RooflineTerms",
+    "ScheduleTuner", "TPU_V5E", "TunerEntry", "all_gather_matmul",
+    "analyze_region", "bucketed_all_reduce", "call_site_key",
+    "clear_decision_log", "crossover_compute_per_element", "decide",
+    "decision_log", "fsdp_gather", "fsdp_gather_tree", "get_config",
+    "grad_accumulate", "halo_exchange", "jacobi_solve", "jacobi_step_bulk",
+    "jacobi_step_overlapped", "managed_all_gather", "managed_all_reduce",
+    "managed_all_to_all", "managed_psum_scatter_gather",
+    "managed_reduce_scatter", "matmul_reduce_scatter",
+    "reduce_replicated_grads", "roofline", "use_config",
+]

@@ -1,0 +1,366 @@
+"""Alpha-beta communication cost model for MDMP scheduling decisions.
+
+The paper's central trade-off (Sec. 4, Fig. 5b/6b): decomposing one bulk
+message into many fine-grained messages pays one latency (alpha) per
+message but allows communication to overlap the computation that produces
+or consumes the data.  MDMP "manages" that decision for the user.  On TPU
+the same decision exists at tile granularity: a chunked ppermute-ring
+schedule pays (chunks * steps) collective-permute latencies but overlaps
+each chunk's DMA with the adjacent chunk's compute.
+
+This module is the decision engine: given operand bytes, mesh-axis size,
+and an estimate of the compute available to hide the transfer, it predicts
+bulk vs interleaved cost and picks a chunk count.  Constants default to
+TPU v5e (the production target); the paper's machines (HECToR / HELIOS /
+JUQUEEN) are included so the paper's crossover figures can be reproduced
+by the benchmark harness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+# ---------------------------------------------------------------------------
+# Hardware models
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Alpha-beta(-gamma) machine description.
+
+    alpha_s:        per-message (per collective-permute hop) latency, seconds
+    link_bw:        per-link bandwidth, bytes/second
+    peak_flops:     per-chip peak (bf16 for TPUs), flop/s
+    hbm_bw:         per-chip HBM bandwidth, bytes/second
+    vmem_bytes:     per-core fast-memory capacity
+    hbm_bytes:      per-chip main memory capacity
+    """
+
+    name: str
+    alpha_s: float
+    link_bw: float
+    peak_flops: float
+    hbm_bw: float
+    vmem_bytes: int = 0
+    hbm_bytes: int = 0
+    # Fine-grained-messaging behaviour (for the paper-reproduction model):
+    # per-message CPU issue overhead, async-progression efficiency (1.0 =
+    # transfers fully progress in the background; 0.0 = no overlap, which is
+    # what the paper observed on HELIOS), and the scalar flop rate of the
+    # delay loop (single core, not the vector peak).
+    issue_overhead_s: float = 1.0e-7
+    overlap_eff: float = 1.0
+    scalar_flops: float = 0.0
+
+
+# TPU v5e — the production target for every roofline number in EXPERIMENTS.md.
+TPU_V5E = HardwareModel(
+    name="tpu_v5e",
+    alpha_s=1.0e-6,          # ~1us collective-permute hop latency on ICI
+    link_bw=50.0e9,          # ~50 GB/s per ICI link
+    peak_flops=197.0e12,     # bf16
+    hbm_bw=819.0e9,
+    vmem_bytes=128 * 1024 * 1024,
+    hbm_bytes=16 * 1024 ** 3,
+)
+
+# The paper's evaluation machines, with representative 2013-era constants
+# (interconnect latency / bandwidth from published specs).  Used only by the
+# paper-reproduction benchmarks to show the crossover ordering matches the
+# paper (HECToR/JUQUEEN cross over, HELIOS's fatter network does not).
+HECTOR_XE6 = HardwareModel(
+    name="hector_cray_xe6", alpha_s=1.5e-6, link_bw=5.0e9,
+    peak_flops=147.2e9 * 32, hbm_bw=85.0e9,
+    issue_overhead_s=2.0e-7, overlap_eff=1.0, scalar_flops=2.3e9)
+HELIOS_BULLX = HardwareModel(
+    name="helios_bullx_b510", alpha_s=1.2e-6, link_bw=4.0e9,
+    peak_flops=2.7e9 * 8 * 16, hbm_bw=102.0e9,
+    # The paper found MPI always beat MDMP on HELIOS: its MPI did not
+    # progress non-blocking messages asynchronously -> no overlap benefit.
+    issue_overhead_s=2.0e-7, overlap_eff=0.0, scalar_flops=2.7e9)
+JUQUEEN_BGQ = HardwareModel(
+    name="juqueen_bgq", alpha_s=2.5e-6, link_bw=2.0e9,
+    peak_flops=204.8e9, hbm_bw=42.6e9,
+    issue_overhead_s=4.0e-7, overlap_eff=1.0, scalar_flops=1.6e9)
+
+DEFAULT_HW = TPU_V5E
+
+
+# ---------------------------------------------------------------------------
+# Collective cost primitives (ring algorithms, which is what managed.py emits)
+# ---------------------------------------------------------------------------
+
+
+def ring_all_gather_time(nbytes_shard: float, n: int, hw: HardwareModel,
+                         chunks: int = 1) -> float:
+    """Ring all-gather of an ``nbytes_shard`` shard across ``n`` ranks."""
+    if n <= 1:
+        return 0.0
+    steps = (n - 1) * max(1, chunks)
+    return steps * hw.alpha_s + (n - 1) * nbytes_shard / hw.link_bw
+
+
+def ring_reduce_scatter_time(nbytes_full: float, n: int, hw: HardwareModel,
+                             chunks: int = 1) -> float:
+    """Ring reduce-scatter of an ``nbytes_full`` operand across ``n`` ranks."""
+    if n <= 1:
+        return 0.0
+    shard = nbytes_full / n
+    steps = (n - 1) * max(1, chunks)
+    return steps * hw.alpha_s + (n - 1) * shard / hw.link_bw
+
+
+def ring_all_reduce_time(nbytes: float, n: int, hw: HardwareModel,
+                         chunks: int = 1) -> float:
+    """RS + AG ring all-reduce."""
+    return (ring_reduce_scatter_time(nbytes, n, hw, chunks)
+            + ring_all_gather_time(nbytes / max(n, 1), n, hw, chunks))
+
+
+def all_to_all_time(nbytes_local: float, n: int, hw: HardwareModel,
+                    chunks: int = 1) -> float:
+    """Ring-style all-to-all: each rank exchanges 1/n of its local operand
+    with every peer ((n-1) permute steps of nbytes_local/n each)."""
+    if n <= 1:
+        return 0.0
+    steps = (n - 1) * max(1, chunks)
+    return steps * hw.alpha_s + (n - 1) * (nbytes_local / n) / hw.link_bw
+
+
+def point_to_point_time(nbytes: float, hw: HardwareModel,
+                        messages: int = 1) -> float:
+    """The paper's PingPong primitive: ``messages`` sends carrying
+    ``nbytes`` total."""
+    return messages * hw.alpha_s + nbytes / hw.link_bw
+
+
+# ---------------------------------------------------------------------------
+# Bulk vs interleaved decision (the "managed" in MDMP)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleDecision:
+    mode: str                 # "bulk" | "interleaved"
+    chunks: int               # ring sub-chunks per step (1 = plain ring)
+    bulk_time_s: float        # predicted comm+compute, bulk schedule
+    interleaved_time_s: float  # predicted comm+compute, chosen interleave
+    comm_time_s: float        # raw transfer time of the collective
+    compute_time_s: float     # compute available for overlap
+
+    @property
+    def predicted_speedup(self) -> float:
+        if self.interleaved_time_s <= 0:
+            return 1.0
+        return self.bulk_time_s / self.interleaved_time_s
+
+
+def _pipeline_time(comm_total: float, compute_total: float, stages: int,
+                   alpha: float, per_stage_msgs: int = 1) -> float:
+    """Pipelined schedule over ``stages`` equal stages: comm of stage i
+    overlaps compute of stage i-1.  Classic software-pipeline bound:
+
+        T = c0 + k0 + (stages-1) * max(c, k) + alpha-per-extra-message
+
+    where c/k are per-stage comm/compute times.
+    """
+    if stages <= 1:
+        return comm_total + compute_total + alpha * per_stage_msgs
+    c = comm_total / stages
+    k = compute_total / stages
+    # Every stage still pays its message latency on the critical path of the
+    # comm lane; with zero fusable compute this reduces exactly to the bulk
+    # ring time (no free lunch from chunking alone).
+    latency = alpha * per_stage_msgs * stages
+    return c + k + (stages - 1) * max(c, k) + latency
+
+
+def decide(nbytes: float, axis_size: int, *, compute_time_s: float = 0.0,
+           hw: HardwareModel = DEFAULT_HW,
+           collective: str = "all_gather",
+           candidate_chunks: Sequence[int] = (1, 2, 4),
+           force_mode: str | None = None) -> ScheduleDecision:
+    """Pick bulk vs interleaved (and a chunk count) for one managed call site.
+
+    ``nbytes``          bytes of the *sharded* operand that each step moves
+                        (AG: shard bytes; RS/AR: full bytes; A2A: local bytes).
+    ``compute_time_s``  the compute adjacent to this collective that an
+                        interleaved schedule can hide (from instrument.py's
+                        readiness analysis, or a flops estimate).
+    """
+    n = max(1, axis_size)
+    timer = {
+        "all_gather": ring_all_gather_time,
+        "reduce_scatter": ring_reduce_scatter_time,
+        "all_reduce": ring_all_reduce_time,
+        "all_to_all": all_to_all_time,
+    }[collective]
+
+    comm_bulk = timer(nbytes, n, hw, 1)
+    bulk_total = comm_bulk + compute_time_s
+
+    best_mode, best_chunks, best_time = "bulk", 1, bulk_total
+    if n > 1:
+        ring_steps = n - 1
+        for c in candidate_chunks:
+            comm_c = timer(nbytes, n, hw, c)
+            stages = ring_steps * c
+            t = _pipeline_time(comm_c - stages * hw.alpha_s, compute_time_s,
+                               stages, hw.alpha_s)
+            if t < best_time * (1.0 - 1e-9):
+                best_mode, best_chunks, best_time = "interleaved", c, t
+
+    if force_mode == "bulk":
+        best_mode, best_chunks, best_time = "bulk", 1, bulk_total
+    elif force_mode == "interleaved" and best_mode == "bulk":
+        best_mode = "interleaved"
+        best_chunks = 1
+        comm_c = timer(nbytes, n, hw, 1)
+        stages = max(1, (n - 1))
+        best_time = _pipeline_time(comm_c - stages * hw.alpha_s,
+                                   compute_time_s, stages, hw.alpha_s)
+
+    return ScheduleDecision(
+        mode=best_mode, chunks=best_chunks,
+        bulk_time_s=bulk_total, interleaved_time_s=best_time,
+        comm_time_s=comm_bulk, compute_time_s=compute_time_s)
+
+
+def pingpong_times(n_elements: int, delay_elements: float,
+                   hw: HardwareModel = DEFAULT_HW,
+                   nbytes_per_element: float = 4.0,
+                   flops_per_delay_element: float = 1.0,
+                   sent_elements: int | None = None
+                   ) -> tuple[float, float]:
+    """LogP-flavoured model of the paper's (Selective)DelayPingPong family.
+
+    One half-iteration copies ``n_elements`` between buffers with
+    ``delay_elements`` adds of artificial compute per element, and sends
+    ``sent_elements`` of them (default: all).
+
+    bulk (MPI baseline): compute fully, then one message —
+        T = compute + alpha + bytes/bw
+    fine (MDMP): one message per sent element, issued as its last write
+    retires; transfers progress asynchronously with efficiency
+    ``hw.overlap_eff`` while the remaining compute runs —
+        T = compute_exposed + per-message issue overhead
+            + un-overlappable message time.
+    Returns (bulk_s, fine_s).
+    """
+    scalar = hw.scalar_flops or hw.peak_flops
+    t_el = delay_elements * flops_per_delay_element / scalar
+    s = n_elements if sent_elements is None else sent_elements
+    compute = n_elements * t_el
+    msg_bytes = s * nbytes_per_element
+
+    bulk = compute + hw.alpha_s + msg_bytes / hw.link_bw
+
+    per_msg = hw.alpha_s + nbytes_per_element / hw.link_bw
+    transfer = s * per_msg
+    overhead = s * hw.issue_overhead_s
+    hidden = hw.overlap_eff * min(transfer, compute)
+    fine = compute + overhead + (transfer - hidden)
+    return bulk, fine
+
+
+def crossover_compute_per_element(n_elements: int,
+                                  hw: HardwareModel = DEFAULT_HW,
+                                  nbytes_per_element: float = 4.0,
+                                  sent_elements: int | None = None) -> float:
+    """Reproduces the paper's DelayPingPong crossover (Fig 5b/6b): the
+    number of delay elements per communicated element above which MDMP's
+    fine-grained intermingled messaging beats the bulk message.  Returns
+    ``inf`` when fine-grained never wins (the paper's HELIOS result)."""
+    def diff(d: float) -> float:
+        bulk, fine = pingpong_times(n_elements, d, hw,
+                                    nbytes_per_element,
+                                    sent_elements=sent_elements)
+        return fine - bulk
+
+    lo, hi = 0.0, 1e9
+    if diff(hi) > 0:
+        return math.inf
+    if diff(lo) <= 0:
+        return 0.0
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if diff(mid) <= 0:
+            hi = mid
+        else:
+            lo = mid
+    return hi
+
+
+def crossover_compute_chunked(n_elements: int, chunks: int,
+                              hw: HardwareModel = DEFAULT_HW,
+                              nbytes_per_element: float = 4.0) -> float:
+    """The TPU-adapted crossover: intermingle at *tile* granularity
+    (``chunks`` messages of n/chunks elements) instead of the paper's
+    per-element messages.  Per-message overheads amortise over the tile, so
+    the crossover exists at realistic constants — this is why MDMP's idea
+    works on TPU at the granularity the hardware rewards (DESIGN.md §2).
+    Returns delay-elements-per-element at which chunked-interleaved beats
+    bulk."""
+    scalar = hw.scalar_flops or hw.peak_flops
+    msg_bytes = n_elements * nbytes_per_element
+
+    def diff(d: float) -> float:
+        compute = n_elements * d / scalar
+        bulk = compute + hw.alpha_s + msg_bytes / hw.link_bw
+        per_chunk = hw.alpha_s + (msg_bytes / chunks) / hw.link_bw
+        transfer = chunks * per_chunk
+        hidden = hw.overlap_eff * min(transfer * (chunks - 1) / chunks,
+                                      compute)
+        fine = compute + chunks * hw.issue_overhead_s + transfer - hidden
+        return fine - bulk
+
+    lo, hi = 0.0, 1e9
+    if diff(hi) > 0:
+        return math.inf
+    if diff(lo) <= 0:
+        return 0.0
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if diff(mid) <= 0:
+            hi = mid
+        else:
+            lo = mid
+    return hi
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (used by benchmarks/roofline.py on dry-run artifacts)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
+             n_chips: int, hw: HardwareModel = DEFAULT_HW) -> RooflineTerms:
+    """The three-term roofline from the spec.  ``hlo_flops``/``hlo_bytes``
+    are whole-program totals from cost_analysis (already per-device in XLA's
+    accounting when lowered SPMD); ``collective_bytes`` is the summed operand
+    bytes of collective ops in the compiled module (per device)."""
+    return RooflineTerms(
+        compute_s=hlo_flops / (n_chips * hw.peak_flops),
+        memory_s=hlo_bytes / (n_chips * hw.hbm_bw),
+        collective_s=collective_bytes / (n_chips * hw.link_bw),
+    )

@@ -1,0 +1,148 @@
+"""Trace-time data-access instrumentation — the paper's read/write tracking.
+
+MDMP instruments every read and write of communicated data inside a
+communication region, and uses the counts from iteration k to schedule
+iteration k+1 ("launch the communication of that data once it is ready").
+
+On TPU the schedule is static, so the *same information* is extracted at
+trace time by walking the jaxpr of the region: for each tracked operand we
+count consuming equations (reads), producing equations along its def-use
+chain (writes), and the program depth at which the last write / first read
+occurs.  ``readiness`` — how early a send operand is fully produced, or how
+late a receive operand is first consumed — is exactly what the managed
+scheduler needs to know how much compute is available to hide the message.
+
+This costs nothing at runtime (the paper's Table 1 shows its runtime
+counters cost ~10-20x on STREAM; the trace-time equivalent is free), which
+we report as a TPU-model advantage in EXPERIMENTS.md §Paper-repro.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+from jax.extend import core as jcore
+
+
+@dataclasses.dataclass
+class AccessRecord:
+    """Read/write profile of one tracked operand inside a region."""
+    label: str
+    reads: int = 0
+    writes: int = 0
+    first_read_depth: int | None = None
+    last_write_depth: int | None = None
+
+    def readiness(self, total_depth: int) -> float:
+        """For send operands: fraction of the region's program that runs
+        *before* the operand is fully produced (0 = ready immediately,
+        1 = ready only at the end — no overlap opportunity)."""
+        if total_depth <= 0 or self.last_write_depth is None:
+            return 0.0
+        return self.last_write_depth / total_depth
+
+    def consumption_slack(self, total_depth: int) -> float:
+        """For recv operands: fraction of the region that runs before the
+        first read (1 = consumed only at the end — maximal overlap)."""
+        if total_depth <= 0 or self.first_read_depth is None:
+            return 1.0
+        return self.first_read_depth / total_depth
+
+
+@dataclasses.dataclass
+class RegionReport:
+    records: dict[str, AccessRecord]
+    total_eqns: int
+
+    def overlap_budget(self, label: str) -> float:
+        """Fraction of the region's equations available to overlap the
+        communication of ``label`` (sends: after last write; recvs: before
+        first read)."""
+        rec = self.records[label]
+        if rec.writes > 0:
+            return 1.0 - rec.readiness(self.total_eqns)
+        return rec.consumption_slack(self.total_eqns)
+
+
+def _walk(jaxpr: jcore.Jaxpr, tracked: dict[Any, str],
+          records: dict[str, AccessRecord], depth0: int) -> int:
+    """Walk eqns, propagating tracked vars through aliasing ops; returns the
+    depth after this jaxpr."""
+    depth = depth0
+    alias_prims = {"convert_element_type", "reshape", "transpose",
+                   "squeeze", "broadcast_in_dim", "copy", "pjit",
+                   "custom_jvp_call", "custom_vjp_call", "remat", "checkpoint"}
+    for eqn in jaxpr.eqns:
+        depth += 1
+        sub_jaxprs = []
+        for param in eqn.params.values():
+            if isinstance(param, jcore.ClosedJaxpr):
+                sub_jaxprs.append((param.jaxpr, None))
+            elif isinstance(param, jcore.Jaxpr):
+                sub_jaxprs.append((param, None))
+        for v in eqn.invars:
+            if isinstance(v, jcore.Literal):
+                continue
+            label = tracked.get(v)
+            if label is not None:
+                rec = records[label]
+                rec.reads += 1
+                if rec.first_read_depth is None:
+                    rec.first_read_depth = depth
+        # Writes: an eqn that *produces* a tracked value.  We propagate
+        # tracking through pure aliasing ops and in-place-style updates
+        # (dynamic_update_slice, add into accumulators is NOT aliasing).
+        if eqn.primitive.name in alias_prims or \
+                eqn.primitive.name == "dynamic_update_slice":
+            for vin in eqn.invars:
+                if not isinstance(vin, jcore.Literal) and vin in tracked:
+                    label = tracked[vin]
+                    for vout in eqn.outvars:
+                        tracked[vout] = label
+                    rec = records[label]
+                    rec.writes += 1
+                    rec.last_write_depth = depth
+                    break
+        # Recurse into sub-jaxprs (scan/while/cond/pjit bodies): map tracked
+        # outer vars to inner binders positionally where possible.
+        for sub, _ in sub_jaxprs:
+            inner_tracked = dict()
+            n_const = len(sub.constvars)
+            operands = [v for v in eqn.invars
+                        if not isinstance(v, jcore.Literal)]
+            for inner_v, outer_v in zip(list(sub.constvars) + list(sub.invars),
+                                        operands[:n_const + len(sub.invars)]):
+                if outer_v in tracked:
+                    inner_tracked[inner_v] = tracked[outer_v]
+            if inner_tracked:
+                depth = _walk(sub, {**tracked, **inner_tracked}, records,
+                              depth)
+    return depth
+
+
+def analyze_region(fn: Callable, *example_args: Any,
+                   tracked_args: Sequence[int | str] | None = None,
+                   labels: Sequence[str] | None = None) -> RegionReport:
+    """Trace ``fn`` and produce read/write records for the tracked inputs.
+
+    ``tracked_args``: indices into the flattened argument list (default:
+    all array arguments).  ``labels``: names for the report.
+    """
+    closed = jax.make_jaxpr(fn)(*example_args)
+    jaxpr = closed.jaxpr
+    flat_invars = list(jaxpr.invars)
+    if tracked_args is None:
+        tracked_args = list(range(len(flat_invars)))
+    if labels is None:
+        labels = [f"arg{i}" for i in tracked_args]
+
+    tracked: dict[Any, str] = {}
+    records: dict[str, AccessRecord] = {}
+    for i, label in zip(tracked_args, labels):
+        tracked[flat_invars[i]] = label
+        records[label] = AccessRecord(label=label)
+
+    total = _walk(jaxpr, tracked, records, 0)
+    return RegionReport(records=records, total_eqns=total)

@@ -1,0 +1,635 @@
+"""Managed collectives — MDMP's send/recv directives, TPU-native.
+
+The paper lets the user *declare* communication (``#pragma send/recv``) and
+has the runtime decide when/how to execute it, intermingling messages with
+the computation that produces or consumes the data.  The JAX/TPU analogue
+implemented here: every collective a model needs is expressed through a
+``managed_*`` entry point that can execute in two modes:
+
+  * ``bulk``         — exactly the unmanaged ``jax.lax`` collective.  This is
+                       the paper-faithful "MDMP disabled at compile time"
+                       path and the numerical oracle for every test.
+  * ``interleaved``  — a chunked ``lax.ppermute`` ring schedule in which each
+                       ring step's DMA overlaps the adjacent step's compute
+                       (for the fused *_matmul variants the compute is fused
+                       into the ring, which is the paper's "send each piece
+                       as soon as its last write occurs" at tile granularity).
+  * ``auto``         — the manager decides per call site using the alpha-beta
+                       cost model (and shape-derived compute estimates), and
+                       logs the decision (the paper's managed-runtime role).
+
+All functions must be called inside ``shard_map`` (they use collective axis
+names).  Interleaved outputs are numerically identical to bulk outputs up to
+floating-point reduction order; tests assert allclose against bulk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from functools import partial
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import cost_model
+from repro.core.cost_model import HardwareModel, TPU_V5E
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Global MDMP configuration + decision log (the managed-runtime audit trail)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MDMPConfig:
+    """Process-wide MDMP behaviour.  ``mode='auto'`` lets the cost model pick
+    per call site; forcing ``bulk`` reproduces the unmanaged baseline,
+    forcing ``interleaved`` reproduces the paper's always-intermingle mode.
+    """
+    mode: str = "auto"                # auto | bulk | interleaved
+    chunks: int | None = None         # override ring sub-chunking
+    hw: HardwareModel = TPU_V5E
+    log_decisions: bool = True
+    # quantized FSDP weight gathering (fp8 payload, bf16 master weights,
+    # exact-dtype gradient reduce-scatter) — §Perf round 3
+    fsdp_gather_dtype: str | None = None
+
+
+_STATE = threading.local()
+
+
+def get_config() -> MDMPConfig:
+    cfg = getattr(_STATE, "config", None)
+    if cfg is None:
+        cfg = MDMPConfig()
+        _STATE.config = cfg
+    return cfg
+
+
+class use_config:
+    """``with mdmp.use_config(MDMPConfig(mode='bulk')): ...``"""
+
+    def __init__(self, config: MDMPConfig):
+        self._new = config
+
+    def __enter__(self) -> MDMPConfig:
+        self._old = getattr(_STATE, "config", None)
+        _STATE.config = self._new
+        return self._new
+
+    def __exit__(self, *exc: Any) -> None:
+        _STATE.config = self._old
+
+
+@dataclasses.dataclass(frozen=True)
+class DecisionRecord:
+    op: str
+    axis: str
+    nbytes: int
+    mode: str
+    chunks: int
+    predicted_bulk_s: float
+    predicted_interleaved_s: float
+
+
+_DECISION_LOG: list[DecisionRecord] = []
+
+
+def decision_log() -> list[DecisionRecord]:
+    return list(_DECISION_LOG)
+
+
+def clear_decision_log() -> None:
+    _DECISION_LOG.clear()
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def _axis_size(axis_name: str) -> int:
+    return lax.psum(1, axis_name)
+
+
+def _nbytes(x: Array) -> int:
+    return int(x.size * x.dtype.itemsize)
+
+
+def _resolve(op: str, axis_name: str, x: Array, mode: str | None,
+             chunks: int | None, collective: str,
+             compute_time_s: float = 0.0) -> tuple[str, int]:
+    """Resolve mode/chunks for a call site and log the decision."""
+    cfg = get_config()
+    mode = mode or cfg.mode
+    n = _axis_size(axis_name)
+    decision = cost_model.decide(
+        _nbytes(x), n, compute_time_s=compute_time_s, hw=cfg.hw,
+        collective=collective,
+        force_mode=None if mode == "auto" else mode)
+    eff_chunks = chunks if chunks is not None else (
+        cfg.chunks if cfg.chunks is not None else decision.chunks)
+    eff_mode = decision.mode if mode == "auto" else mode
+    if cfg.log_decisions:
+        _DECISION_LOG.append(DecisionRecord(
+            op=op, axis=axis_name, nbytes=_nbytes(x), mode=eff_mode,
+            chunks=eff_chunks,
+            predicted_bulk_s=decision.bulk_time_s,
+            predicted_interleaved_s=decision.interleaved_time_s))
+    return eff_mode, max(1, int(eff_chunks))
+
+
+def _ring_perm(n: int, shift: int = 1) -> list[tuple[int, int]]:
+    return [(i, (i + shift) % n) for i in range(n)]
+
+
+def _split(x: Array, chunks: int, axis: int = 0) -> list[Array]:
+    if chunks <= 1 or x.shape[axis] % chunks != 0:
+        return [x]
+    return list(jnp.split(x, chunks, axis=axis))
+
+
+def _ppermute_chunked(x: Array, axis_name: str, perm, chunks: int) -> Array:
+    """One ring step as ``chunks`` independent collective-permutes (the
+    finer-grained messages of the paper; XLA may overlap them)."""
+    pieces = _split(x, chunks)
+    moved = [lax.ppermute(p, axis_name, perm) for p in pieces]
+    return moved[0] if len(moved) == 1 else jnp.concatenate(moved, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# managed_all_gather
+#
+# Every managed collective carries a custom VJP implementing its exact
+# mathematical dual as another managed collective (AG <-> RS, AR <-> AR,
+# A2A <-> reverse A2A, AG-matmul <-> matmul-RS...).  This matters twice:
+#  (1) memory — differentiating through the ring fori_loops would save the
+#      per-step carries (O(ring_steps x operand) residuals per call);
+#  (2) schedule — the backward pass stays an MDMP-interleaved ring instead
+#      of whatever the loop transpose produces.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def managed_all_gather(x: Array, axis_name: str, mode: str | None = None,
+                       chunks: int | None = None) -> Array:
+    """All-gather ``x`` (tiled along axis 0) across ``axis_name``."""
+    return _managed_all_gather_impl(x, axis_name, mode, chunks)
+
+
+def _managed_all_gather_impl(x, axis_name, mode, chunks):
+    n = _axis_size(axis_name)
+    if n == 1:
+        return x
+    eff_mode, c = _resolve("all_gather", axis_name, x, mode, chunks,
+                           "all_gather")
+    if eff_mode == "bulk":
+        return lax.all_gather(x, axis_name, tiled=True)
+    return _ring_all_gather(x, axis_name, n, c)
+
+
+def _ag_fwd(x, axis_name, mode, chunks):
+    return _managed_all_gather_impl(x, axis_name, mode, chunks), None
+
+
+def _ag_bwd(axis_name, mode, chunks, _, dy):
+    return (_managed_reduce_scatter_impl(dy, axis_name, mode, chunks),)
+
+
+managed_all_gather.defvjp(_ag_fwd, _ag_bwd)
+
+
+def _ring_all_gather(x: Array, axis_name: str, n: int, chunks: int) -> Array:
+    idx = lax.axis_index(axis_name)
+    m = x.shape[0]
+    perm = _ring_perm(n)
+    out = jnp.zeros((n * m,) + x.shape[1:], x.dtype)
+    out = lax.dynamic_update_slice_in_dim(out, x, idx * m, axis=0)
+
+    def body(s, carry):
+        out, buf = carry
+        buf = _ppermute_chunked(buf, axis_name, perm, chunks)
+        src = (idx - s) % n          # buf now holds rank (idx - s)'s shard
+        out = lax.dynamic_update_slice_in_dim(out, buf, src * m, axis=0)
+        return out, buf
+
+    out, _ = lax.fori_loop(1, n, body, (out, x))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# managed_reduce_scatter
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def managed_reduce_scatter(x: Array, axis_name: str,
+                           mode: str | None = None,
+                           chunks: int | None = None) -> Array:
+    """Sum-reduce ``x`` across ``axis_name``, scattering blocks of axis 0
+    (tiled): rank i receives ``sum_r x_r[i*m:(i+1)*m]``."""
+    return _managed_reduce_scatter_impl(x, axis_name, mode, chunks)
+
+
+def _managed_reduce_scatter_impl(x, axis_name, mode, chunks):
+    n = _axis_size(axis_name)
+    if n == 1:
+        return x
+    eff_mode, c = _resolve("reduce_scatter", axis_name, x, mode, chunks,
+                           "reduce_scatter")
+    if eff_mode == "bulk":
+        return lax.psum_scatter(x, axis_name, scatter_dimension=0, tiled=True)
+    return _ring_reduce_scatter(x, axis_name, n, c)
+
+
+def _rs_fwd(x, axis_name, mode, chunks):
+    return _managed_reduce_scatter_impl(x, axis_name, mode, chunks), None
+
+
+def _rs_bwd(axis_name, mode, chunks, _, dy):
+    return (_managed_all_gather_impl(dy, axis_name, mode, chunks),)
+
+
+managed_reduce_scatter.defvjp(_rs_fwd, _rs_bwd)
+
+
+def _ring_reduce_scatter(x: Array, axis_name: str, n: int,
+                         chunks: int) -> Array:
+    idx = lax.axis_index(axis_name)
+    assert x.shape[0] % n == 0, (
+        f"reduce_scatter axis 0 ({x.shape[0]}) not divisible by {n}")
+    m = x.shape[0] // n
+    blocks = x.reshape((n, m) + x.shape[1:])
+    perm = _ring_perm(n)
+
+    # Block b starts at rank (b+1) and accumulates along the ring; at step s
+    # rank i receives the partial of block (i-1-s) and adds its own share.
+    send = lax.dynamic_index_in_dim(blocks, (idx - 1) % n, axis=0,
+                                    keepdims=False)
+
+    def body(s, buf):
+        incoming = _ppermute_chunked(buf, axis_name, perm, chunks)
+        blk = (idx - 1 - s) % n
+        mine = lax.dynamic_index_in_dim(blocks, blk, axis=0, keepdims=False)
+        return incoming + mine
+
+    return lax.fori_loop(1, n, body, send)
+
+
+# ---------------------------------------------------------------------------
+# managed_all_reduce (psum)
+# ---------------------------------------------------------------------------
+
+
+def managed_all_reduce(x: Array, axis_name: str, *, mode: str | None = None,
+                       chunks: int | None = None) -> Array:
+    """Sum ``x`` across ``axis_name`` (all ranks receive the sum).
+    The ring path composes the custom-VJP'd RS/AG, so its transpose is a
+    flat-memory ring as well."""
+    n = _axis_size(axis_name)
+    if n == 1:
+        return x
+    eff_mode, c = _resolve("all_reduce", axis_name, x, mode, chunks,
+                           "all_reduce")
+    if eff_mode == "bulk" or x.ndim == 0 or x.shape[0] % n != 0:
+        return lax.psum(x, axis_name)
+    scattered = managed_reduce_scatter(x, axis_name, eff_mode, c)
+    return managed_all_gather(scattered, axis_name, eff_mode, c)
+
+
+# ---------------------------------------------------------------------------
+# managed_all_to_all
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def managed_all_to_all(x: Array, axis_name: str, split_axis: int = 0,
+                       concat_axis: int = 0, mode: str | None = None,
+                       chunks: int | None = None) -> Array:
+    """All-to-all: block j of ``x`` (along split_axis) goes to rank j; the
+    received blocks concatenate along ``concat_axis`` in rank order."""
+    return _managed_all_to_all_impl(x, axis_name, split_axis, concat_axis,
+                                    mode, chunks)
+
+
+def _managed_all_to_all_impl(x, axis_name, split_axis, concat_axis, mode,
+                             chunks):
+    n = _axis_size(axis_name)
+    if n == 1:
+        return x
+    eff_mode, _ = _resolve("all_to_all", axis_name, x, mode, chunks,
+                           "all_to_all")
+    if eff_mode == "bulk":
+        return lax.all_to_all(x, axis_name, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
+    return _ring_all_to_all(x, axis_name, n, split_axis, concat_axis)
+
+
+def _a2a_fwd(x, axis_name, split_axis, concat_axis, mode, chunks):
+    return _managed_all_to_all_impl(x, axis_name, split_axis, concat_axis,
+                                    mode, chunks), None
+
+
+def _a2a_bwd(axis_name, split_axis, concat_axis, mode, chunks, _, dy):
+    # transpose of an all-to-all is the reverse all-to-all
+    return (_managed_all_to_all_impl(dy, axis_name, concat_axis, split_axis,
+                                     mode, chunks),)
+
+
+managed_all_to_all.defvjp(_a2a_fwd, _a2a_bwd)
+
+
+def _ring_all_to_all(x: Array, axis_name: str, n: int, split_axis: int,
+                     concat_axis: int) -> Array:
+    idx = lax.axis_index(axis_name)
+    assert x.shape[split_axis] % n == 0
+    blocks = jnp.split(x, n, axis=split_axis)     # blocks[j] -> rank j
+
+    # Every shifted permute is independent (all source from x): the n-1
+    # fine-grained messages can all be in flight at once.
+    out_shape = list(blocks[0].shape)
+    # received blocks stack along concat_axis in SOURCE-rank order; the
+    # placement stride is the block's own concat-axis extent
+    stride = out_shape[concat_axis]
+    out = jnp.zeros([s if d != concat_axis else s * n
+                     for d, s in enumerate(out_shape)], x.dtype)
+    # My own block stays put: out[block idx] = blocks[idx] (dynamic).
+    own = _dyn_block(jnp.stack(blocks), idx)
+    out = lax.dynamic_update_slice_in_dim(out, own, idx * stride,
+                                          axis=concat_axis)
+    for s in range(1, n):
+        perm = _ring_perm(n, shift=s)
+        # send blocks[(idx+s) % n] to rank idx+s; receive from idx-s.
+        tosend = _dyn_block(jnp.stack(blocks), (idx + s) % n)
+        got = lax.ppermute(tosend, axis_name, perm)
+        src = (idx - s) % n
+        out = lax.dynamic_update_slice_in_dim(out, got, src * stride,
+                                              axis=concat_axis)
+    return out
+
+
+def _dyn_block(stacked: Array, i) -> Array:
+    return lax.dynamic_index_in_dim(stacked, i, axis=0, keepdims=False)
+
+
+# ---------------------------------------------------------------------------
+# Fused ring collectives — communication intermingled with the compute that
+# produces/consumes it (the paper's Figure 3 strategy, tile-granular).
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def all_gather_matmul(x: Array, w: Array, axis_name: str,
+                      mode: str | None = None, chunks: int | None = None,
+                      precision=None) -> Array:
+    """``all_gather(x, axis) @ w`` with the gather interleaved into the
+    matmul:  each ring step multiplies the block that just arrived while the
+    next block is in flight.  x: [m_local, k] (sharded on axis 0 over
+    ``axis_name``), w: [k, f] (replicated or TP-sharded on f).
+    Returns [m_local * n, f].
+
+    VJP (the MDMP duality): dx = matmul_reduce_scatter(dy, w^T);
+    dw = gram ring (re-gather x, accumulate x_blk^T dy_blk).
+    """
+    return _ag_matmul_impl(x, w, axis_name, mode, chunks, precision)
+
+
+def _ag_matmul_impl(x, w, axis_name, mode, chunks, precision):
+    n = _axis_size(axis_name)
+    if n == 1:
+        return jnp.dot(x, w, precision=precision)
+    flops = 2.0 * x.shape[0] * n * x.shape[1] * w.shape[1]
+    compute_s = flops / get_config().hw.peak_flops
+    eff_mode, c = _resolve("all_gather_matmul", axis_name, x, mode, chunks,
+                           "all_gather", compute_time_s=compute_s)
+    if eff_mode == "bulk":
+        xg = lax.all_gather(x, axis_name, tiled=True)
+        return jnp.dot(xg, w, precision=precision)
+
+    idx = lax.axis_index(axis_name)
+    m = x.shape[0]
+    perm = _ring_perm(n)
+    out = jnp.zeros((n * m, w.shape[1]),
+                    jnp.result_type(x.dtype, w.dtype))
+    out = lax.dynamic_update_slice_in_dim(
+        out, jnp.dot(x, w, precision=precision).astype(out.dtype),
+        idx * m, axis=0)
+
+    def body(s, carry):
+        out, buf = carry
+        buf = _ppermute_chunked(buf, axis_name, perm, c)
+        src = (idx - s) % n
+        blockprod = jnp.dot(buf, w, precision=precision).astype(out.dtype)
+        out = lax.dynamic_update_slice_in_dim(out, blockprod, src * m, axis=0)
+        return out, buf
+
+    out, _ = lax.fori_loop(1, n, body, (out, x))
+    return out
+
+
+def _gram_ag_ring(a: Array, b: Array, axis_name: str, mode, chunks,
+                  precision) -> Array:
+    """``all_gather(a, axis)^T @ b`` with the gather interleaved into the
+    accumulation: dw-style gram for the ring VJPs.  a: [m_loc, p] sharded
+    on axis 0; b: [n*m_loc, q] full rows.  Returns [p, q] (per-rank
+    partial — the w shard's gradient needs no further reduction because
+    each rank's w shard only saw its own output columns)."""
+    n = _axis_size(axis_name)
+    if n == 1:
+        return jnp.dot(a.T, b, precision=precision)
+    eff_mode, c = _resolve("gram_ag_ring", axis_name, a, mode, chunks,
+                           "all_gather")
+    if eff_mode == "bulk":
+        ag = lax.all_gather(a, axis_name, tiled=True)
+        return jnp.dot(ag.T, b, precision=precision)
+
+    idx = lax.axis_index(axis_name)
+    m = a.shape[0]
+    perm = _ring_perm(n)
+
+    def block(buf, src):
+        rows = lax.dynamic_slice_in_dim(b, src * m, m, axis=0)
+        return jnp.dot(buf.T, rows, precision=precision)
+
+    acc = block(a, idx).astype(jnp.float32)
+
+    def body(s, carry):
+        acc, buf = carry
+        buf = _ppermute_chunked(buf, axis_name, perm, c)
+        src = (idx - s) % n
+        return acc + block(buf, src).astype(jnp.float32), buf
+
+    acc, _ = lax.fori_loop(1, n, body, (acc, a))
+    return acc.astype(jnp.result_type(a.dtype, b.dtype))
+
+
+def _agmm_fwd(x, w, axis_name, mode, chunks, precision):
+    y = _ag_matmul_impl(x, w, axis_name, mode, chunks, precision)
+    return y, (x, w)
+
+
+def _agmm_bwd(axis_name, mode, chunks, precision, res, dy):
+    x, w = res
+    dx = _mmrs_impl(dy, w.T, axis_name, mode, chunks, precision)
+    dw = _gram_ag_ring(x, dy, axis_name, mode, chunks, precision)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+all_gather_matmul.defvjp(_agmm_fwd, _agmm_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def all_gather_matmul_multi(x: Array, ws: Sequence[Array], axis_name: str,
+                            mode: str | None = None,
+                            chunks: int | None = None,
+                            precision=None) -> list[Array]:
+    """Like all_gather_matmul but multiplies each arriving block by SEVERAL
+    weight matrices in the same ring (fused QKV / fused z,x|B,C|dt
+    projections, whose outputs have different shardings and therefore can't
+    live in one matrix).  One gather ring, len(ws) matmuls per step."""
+    return _ag_matmul_multi_impl(x, ws, axis_name, mode, chunks, precision)
+
+
+def _ag_matmul_multi_impl(x, ws, axis_name, mode, chunks, precision):
+    n = _axis_size(axis_name)
+    if n == 1:
+        return [jnp.dot(x, w, precision=precision) for w in ws]
+    total_cols = sum(w.shape[1] for w in ws)
+    flops = 2.0 * x.shape[0] * n * x.shape[1] * total_cols
+    compute_s = flops / get_config().hw.peak_flops
+    eff_mode, c = _resolve("all_gather_matmul_multi", axis_name, x, mode,
+                           chunks, "all_gather", compute_time_s=compute_s)
+    if eff_mode == "bulk":
+        xg = lax.all_gather(x, axis_name, tiled=True)
+        return [jnp.dot(xg, w, precision=precision) for w in ws]
+
+    idx = lax.axis_index(axis_name)
+    m = x.shape[0]
+    perm = _ring_perm(n)
+    outs = tuple(
+        jnp.zeros((n * m, w.shape[1]), jnp.result_type(x.dtype, w.dtype))
+        for w in ws)
+
+    def place(outs, buf, src):
+        return tuple(
+            lax.dynamic_update_slice_in_dim(
+                o, jnp.dot(buf, w, precision=precision).astype(o.dtype),
+                src * m, axis=0)
+            for o, w in zip(outs, ws))
+
+    outs = place(outs, x, idx)
+
+    def body(s, carry):
+        outs, buf = carry
+        buf = _ppermute_chunked(buf, axis_name, perm, c)
+        src = (idx - s) % n
+        return place(outs, buf, src), buf
+
+    (outs, _) = lax.fori_loop(1, n, body, (outs, x))
+    return list(outs)
+
+
+def _agmm_multi_fwd(x, ws, axis_name, mode, chunks, precision):
+    ys = _ag_matmul_multi_impl(x, ws, axis_name, mode, chunks, precision)
+    return ys, (x, tuple(ws))
+
+
+def _agmm_multi_bwd(axis_name, mode, chunks, precision, res, dys):
+    x, ws = res
+    dx = None
+    dws = []
+    for w, dy in zip(ws, dys):
+        d = _mmrs_impl(dy, w.T, axis_name, mode, chunks, precision)
+        dx = d if dx is None else dx + d
+        dws.append(_gram_ag_ring(x, dy, axis_name, mode, chunks,
+                                 precision).astype(w.dtype))
+    return dx.astype(x.dtype), list(dws)
+
+
+all_gather_matmul_multi.defvjp(_agmm_multi_fwd, _agmm_multi_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def matmul_reduce_scatter(x: Array, w: Array, axis_name: str,
+                          mode: str | None = None, chunks: int | None = None,
+                          precision=None) -> Array:
+    """``reduce_scatter(x @ w, axis)`` with the matmul interleaved into the
+    reduction ring: each step computes only the output block about to be
+    sent — the paper's "send data as soon as it has been computed".
+    x: [M, k_local] with M divisible by axis size, w: [k_local, d]
+    (both sharded on the contracting dim over ``axis_name``).
+    Returns [M // n, d] (rank i holds block i of rows).
+
+    VJP (duality): dx = all_gather_matmul(dy, w^T);
+    dw = gram ring over dy (x^T @ AG(dy)).
+    """
+    return _mmrs_impl(x, w, axis_name, mode, chunks, precision)
+
+
+def _mmrs_impl(x, w, axis_name, mode, chunks, precision):
+    n = _axis_size(axis_name)
+    if n == 1:
+        return jnp.dot(x, w, precision=precision)
+    flops = 2.0 * x.shape[0] * x.shape[1] * w.shape[1]
+    compute_s = flops / get_config().hw.peak_flops
+    eff_mode, c = _resolve("matmul_reduce_scatter", axis_name, x, mode,
+                           chunks, "reduce_scatter",
+                           compute_time_s=compute_s)
+    if eff_mode == "bulk":
+        y = jnp.dot(x, w, precision=precision)
+        return lax.psum_scatter(y, axis_name, scatter_dimension=0,
+                                tiled=True)
+
+    idx = lax.axis_index(axis_name)
+    assert x.shape[0] % n == 0
+    m = x.shape[0] // n
+    perm = _ring_perm(n)
+    acc_dtype = jnp.result_type(x.dtype, w.dtype)
+
+    def block_prod(b):
+        rows = lax.dynamic_slice_in_dim(x, b * m, m, axis=0)
+        return jnp.dot(rows, w, precision=precision).astype(acc_dtype)
+
+    send = block_prod((idx - 1) % n)
+
+    def body(s, buf):
+        incoming = _ppermute_chunked(buf, axis_name, perm, c)
+        blk = (idx - 1 - s) % n
+        return incoming + block_prod(blk)
+
+    return lax.fori_loop(1, n, body, send)
+
+
+def _mmrs_fwd(x, w, axis_name, mode, chunks, precision):
+    y = _mmrs_impl(x, w, axis_name, mode, chunks, precision)
+    return y, (x, w)
+
+
+def _mmrs_bwd(axis_name, mode, chunks, precision, res, dy):
+    x, w = res
+    dx = _ag_matmul_impl(dy, w.T, axis_name, mode, chunks, precision)
+    # dw = x^T @ AG(dy): gram ring over dy blocks against x rows
+    dw = _gram_ag_ring(dy, x, axis_name, mode, chunks, precision).T
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+matmul_reduce_scatter.defvjp(_mmrs_fwd, _mmrs_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Convenience: sequence-parallel psum replacement
+# ---------------------------------------------------------------------------
+
+
+def managed_psum_scatter_gather(x: Array, axis_name: str, *,
+                                mode: str | None = None) -> Array:
+    """psum expressed as RS+AG so the two halves can straddle compute
+    (Megatron-SP style); numerically identical to psum."""
+    return managed_all_gather(
+        managed_reduce_scatter(x, axis_name, mode=mode), axis_name,
+        mode=mode)

@@ -1,0 +1,186 @@
+"""As-ready gradient reduction — MDMP's "last write triggers send" for
+data-parallel training.
+
+In a bulk-synchronous data-parallel step the gradient all-reduce happens
+after the whole backward pass (the paper's Figure 2 phase separation).  The
+MDMP schedule fires each parameter's reduction the moment its gradient is
+fully written — i.e. per-layer, *inside* the backward scan, overlapping
+layer i's reduction with layer i-1's backward compute.
+
+In JAX this falls out of autodiff once parameters are gathered-on-use:
+
+    w_full = managed_all_gather(w_shard, 'data')     # FSDP forward
+    ... use w_full ...
+
+The transpose of (ring) all-gather is a (ring) reduce-scatter, and scan
+transposition places it in the per-layer backward step — exactly the
+as-ready schedule.  This module packages that pattern plus the explicit
+psum fallback for replicated (non-FSDP) parameters, and a bucketing helper
+(the paper's message-aggregation counter-knob) for benchmarks.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from functools import partial
+
+from repro.core.managed import (get_config, managed_all_gather,
+                                managed_all_reduce, managed_reduce_scatter)
+
+Array = jax.Array
+
+
+def fsdp_gather(w_shard: Array, axis_name: str, *, axis: int = 0,
+                mode: str | None = None) -> Array:
+    """Gather an FSDP-sharded parameter (sharded on ``axis``) for use.
+
+    Differentiating through this op yields the as-ready reduce-scatter of
+    the gradient in the backward pass (bulk or ring to match ``mode``).
+
+    When ``MDMPConfig.fsdp_gather_dtype`` is set (e.g. 'float8_e4m3fn'),
+    the gather payload is quantised per-shard (absmax scale) — half the
+    FSDP link bytes vs bf16 — while master weights stay bf16 and the
+    gradient reduce-scatter stays exact (weight-only quantisation).
+    """
+    qdt = get_config().fsdp_gather_dtype
+    if qdt and w_shard.ndim >= 2 and w_shard.size >= 1 << 16:
+        return _fsdp_gather_q(w_shard, axis_name, axis, mode, qdt)
+    if axis == 0:
+        return managed_all_gather(w_shard, axis_name, mode=mode)
+    moved = jnp.moveaxis(w_shard, axis, 0)
+    out = managed_all_gather(moved, axis_name, mode=mode)
+    return jnp.moveaxis(out, 0, axis)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _fsdp_gather_q(w_shard, axis_name, axis, mode, qdt):
+    return _fsdp_gather_q_impl(w_shard, axis_name, axis, mode, qdt)
+
+
+def _fsdp_gather_q_impl(w_shard, axis_name, axis, mode, qdt):
+    moved = jnp.moveaxis(w_shard, axis, 0) if axis else w_shard
+    qdtype = jnp.dtype(qdt)
+    fmax = float(jnp.finfo(qdtype).max)
+    absmax = jnp.max(jnp.abs(moved.astype(jnp.float32)))
+    scale = jnp.maximum(absmax, 1e-12) / fmax
+    q = (moved.astype(jnp.float32) / scale).astype(qdtype)
+    qg = managed_all_gather(q, axis_name, mode)              # fp8 payload
+    s_all = managed_all_gather(scale.reshape(1), axis_name, mode)
+    n = s_all.shape[0]
+    m = moved.shape[0]
+    blocks = qg.reshape((n, m) + qg.shape[1:]).astype(jnp.float32)
+    deq = blocks * s_all.reshape((n,) + (1,) * (blocks.ndim - 1))
+    out = deq.reshape(qg.shape).astype(w_shard.dtype)
+    return jnp.moveaxis(out, 0, axis) if axis else out
+
+
+def _fsdp_gather_q_fwd(w_shard, axis_name, axis, mode, qdt):
+    return _fsdp_gather_q_impl(w_shard, axis_name, axis, mode, qdt), None
+
+
+def _fsdp_gather_q_bwd(axis_name, axis, mode, qdt, _, dy):
+    # gradient path stays EXACT (bf16/f32 reduce-scatter)
+    moved = jnp.moveaxis(dy, axis, 0) if axis else dy
+    g = managed_reduce_scatter(moved, axis_name, mode)
+    return (jnp.moveaxis(g, 0, axis) if axis else g,)
+
+
+_fsdp_gather_q.defvjp(_fsdp_gather_q_fwd, _fsdp_gather_q_bwd)
+
+
+def fsdp_gather_tree(params: Any, axis_name: str, *, min_size: int = 1024,
+                     mode: str | None = None) -> Any:
+    """Gather every FSDP-sharded leaf of a param tree.  Leaves smaller than
+    ``min_size`` elements are assumed replicated and passed through."""
+    def gather(w):
+        if w.ndim >= 1 and w.size >= min_size:
+            return fsdp_gather(w, axis_name, mode=mode)
+        return w
+    return jax.tree.map(gather, params)
+
+
+def reduce_replicated_grads(grads: Any, axis_names: Sequence[str], *,
+                            mean: bool = True) -> Any:
+    """Bulk psum/pmean for gradients of replicated parameters (the
+    leftovers that don't flow through an fsdp_gather transpose)."""
+    def red(g):
+        out = g
+        for ax in axis_names:
+            out = managed_all_reduce(out, ax)
+        if mean:
+            denom = 1
+            for ax in axis_names:
+                denom = denom * lax.psum(1, ax)
+            out = out / denom
+        return out
+    return jax.tree.map(red, grads)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed reduction — the message-aggregation baseline/knob
+# ---------------------------------------------------------------------------
+
+
+def bucketed_all_reduce(grads: Any, axis_name: str, *,
+                        bucket_bytes: int = 32 * 1024 * 1024,
+                        mode: str | None = None) -> Any:
+    """Flatten the grad tree into buckets of ~``bucket_bytes`` and reduce
+    each bucket with one collective.  bucket_bytes=inf reproduces the
+    single-bulk-message baseline; small buckets approach the paper's
+    fine-grained per-datum messaging.  Used by the benchmark harness to
+    sweep the aggregation/overlap trade-off."""
+    leaves, treedef = jax.tree.flatten(grads)
+    if not leaves:
+        return grads
+    dtype = leaves[0].dtype
+    flat = [jnp.ravel(l).astype(dtype) for l in leaves]
+    sizes = [f.size for f in flat]
+    concat = jnp.concatenate(flat) if len(flat) > 1 else flat[0]
+
+    itemsize = concat.dtype.itemsize
+    per_bucket = max(1, int(bucket_bytes // itemsize))
+    total = concat.size
+    reduced_parts = []
+    start = 0
+    while start < total:
+        stop = min(start + per_bucket, total)
+        part = lax.slice_in_dim(concat, start, stop, axis=0)
+        reduced_parts.append(managed_all_reduce(part, axis_name, mode=mode))
+        start = stop
+    red = (jnp.concatenate(reduced_parts)
+           if len(reduced_parts) > 1 else reduced_parts[0])
+
+    out_leaves = []
+    off = 0
+    for leaf, size in zip(leaves, sizes):
+        out_leaves.append(red[off:off + size].reshape(leaf.shape)
+                          .astype(leaf.dtype))
+        off += size
+    return jax.tree.unflatten(treedef, out_leaves)
+
+
+def grad_accumulate(step_grads_fn, microbatches: int):
+    """Gradient accumulation driver: ``step_grads_fn(mb) -> (loss, grads)``
+    over ``microbatches`` stacked microbatches (leading axis).  Returns a
+    function of the stacked batch producing (mean_loss, summed_grads) via
+    lax.scan — keeps HLO size independent of the accumulation factor."""
+    def accumulate(stacked_batch):
+        def body(carry, mb):
+            loss_acc, grads_acc = carry
+            loss, grads = step_grads_fn(mb)
+            grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
+            return (loss_acc + loss, grads_acc), None
+
+        mb0 = jax.tree.map(lambda x: x[0], stacked_batch)
+        loss0, grads0 = step_grads_fn(mb0)
+        rest = jax.tree.map(lambda x: x[1:], stacked_batch)
+        (loss, grads), _ = lax.scan(body, (loss0, grads0), rest)
+        scale = 1.0 / microbatches
+        return loss * scale, jax.tree.map(lambda g: g * scale, grads)
+
+    return accumulate

@@ -1,0 +1,136 @@
+"""Runtime schedule tuner — the paper's iteration-(k)→(k+1) adaptation.
+
+MDMP records data-access behaviour during early iterations and uses it to
+schedule later iterations.  The TPU analogue cannot re-schedule inside a
+compiled step, but it CAN re-pick schedules *between* steps: each managed
+call site is keyed by (op, shape, dtype, axis), seeded with the cost-model
+decision, and updated from measurements (wall-clock on real hardware, or
+HLO-derived estimates in this container).  Changing a decision re-lowers
+only the affected step function — the paper's "evaluate different
+communication optimisations at runtime to auto-tune" (Sec. 4).
+
+The cache is JSON-serialisable so tuned schedules persist across restarts
+(they ride along with checkpoints).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from typing import Any
+
+from repro.core import cost_model
+from repro.core.cost_model import HardwareModel, TPU_V5E
+
+
+def call_site_key(op: str, shape: tuple, dtype: str, axis: str,
+                  axis_size: int) -> str:
+    return f"{op}|{'x'.join(map(str, shape))}|{dtype}|{axis}{axis_size}"
+
+
+@dataclasses.dataclass
+class TunerEntry:
+    key: str
+    mode: str
+    chunks: int
+    predicted_s: float
+    measured_s: dict[str, float] = dataclasses.field(default_factory=dict)
+    trials: int = 0
+
+    def best_measured(self) -> tuple[str, float] | None:
+        if not self.measured_s:
+            return None
+        k = min(self.measured_s, key=self.measured_s.get)
+        return k, self.measured_s[k]
+
+
+class ScheduleTuner:
+    """Measure-and-adapt schedule cache for managed call sites."""
+
+    #: candidate (mode, chunks) variants trialled per call site
+    CANDIDATES = (("bulk", 1), ("interleaved", 1), ("interleaved", 2),
+                  ("interleaved", 4))
+
+    def __init__(self, hw: HardwareModel = TPU_V5E,
+                 path: str | None = None):
+        self.hw = hw
+        self.path = path
+        self._entries: dict[str, TunerEntry] = {}
+        if path and os.path.exists(path):
+            self.load(path)
+
+    # -- decisions ----------------------------------------------------------
+
+    def decide(self, op: str, shape: tuple, dtype_str: str, axis: str,
+               axis_size: int, *, nbytes: int,
+               compute_time_s: float = 0.0,
+               collective: str = "all_gather") -> TunerEntry:
+        key = call_site_key(op, shape, dtype_str, axis, axis_size)
+        entry = self._entries.get(key)
+        if entry is None:
+            d = cost_model.decide(nbytes, axis_size,
+                                  compute_time_s=compute_time_s,
+                                  hw=self.hw, collective=collective)
+            entry = TunerEntry(key=key, mode=d.mode, chunks=d.chunks,
+                               predicted_s=d.interleaved_time_s)
+            self._entries[key] = entry
+        return entry
+
+    # -- measurement feedback (iteration k informs iteration k+1) -----------
+
+    def record(self, key: str, mode: str, chunks: int,
+               measured_s: float) -> None:
+        entry = self._entries.get(key)
+        if entry is None:
+            entry = TunerEntry(key=key, mode=mode, chunks=chunks,
+                               predicted_s=math.inf)
+            self._entries[key] = entry
+        variant = f"{mode}:{chunks}"
+        prev = entry.measured_s.get(variant)
+        # EWMA so stragglers/noise don't flip schedules on one sample.
+        entry.measured_s[variant] = (measured_s if prev is None
+                                     else 0.7 * prev + 0.3 * measured_s)
+        entry.trials += 1
+        best = entry.best_measured()
+        if best is not None:
+            mode_s, chunks_s = best[0].split(":")
+            entry.mode, entry.chunks = mode_s, int(chunks_s)
+
+    def next_trial(self, key: str) -> tuple[str, int] | None:
+        """Suggest an untried candidate variant for this call site (the
+        paper's 'evaluate different communication optimisations at
+        runtime'), or None when the sweep is complete."""
+        entry = self._entries.get(key)
+        if entry is None:
+            return self.CANDIDATES[0]
+        tried = set(entry.measured_s)
+        for mode, chunks in self.CANDIDATES:
+            if f"{mode}:{chunks}" not in tried:
+                return mode, chunks
+        return None
+
+    # -- persistence ---------------------------------------------------------
+
+    def to_json(self) -> str:
+        return json.dumps({k: dataclasses.asdict(v)
+                           for k, v in self._entries.items()}, indent=2)
+
+    def save(self, path: str | None = None) -> None:
+        path = path or self.path
+        assert path, "no tuner cache path configured"
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(self.to_json())
+        os.replace(tmp, path)
+
+    def load(self, path: str) -> None:
+        with open(path) as f:
+            raw = json.load(f)
+        for k, v in raw.items():
+            self._entries[k] = TunerEntry(**v)
+
+    @property
+    def entries(self) -> dict[str, TunerEntry]:
+        return dict(self._entries)

@@ -1,0 +1,136 @@
+"""Blockwise (flash) attention — Pallas TPU kernel.
+
+Online-softmax attention that never materialises the [Sq, Skv] logits.
+Grid: (batch, q_heads, q_blocks, kv_blocks) with the kv dimension iterated
+innermost; running max / sum / output accumulators live in VMEM scratch and
+persist across kv steps (the standard TPU flash pattern).  GQA is handled
+in the k/v BlockSpec index maps (head h reads kv head h * KV // H) — no
+head-expansion copies.  Causal + sliding-window masking is applied
+per-block; fully-masked blocks still run (grid is static) but their
+contribution is zero.
+
+VMEM budget per step (bf16, blk_q = blk_kv = 512, hd = 256):
+q/k/v blocks 3 * 512*256*2 = 768 KB + f32 accumulators 512*256*4 = 512 KB
+— comfortably inside the ~128 MB/core VMEM with double buffering; block
+sizes are MXU-aligned multiples of 128 (tuned in ops.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window: int, q_offset: int, blk_q: int,
+                  blk_kv: int, n_kv_blocks: int, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32)               # [blk_q, hd]
+    k = k_ref[...].astype(jnp.float32)               # [blk_kv, hd]
+    v = v_ref[...].astype(jnp.float32)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # [blk_q, blk_kv]
+
+    qpos = q_offset + qi * blk_q + lax.broadcasted_iota(
+        jnp.int32, (blk_q, blk_kv), 0)
+    kpos = ki * blk_kv + lax.broadcasted_iota(
+        jnp.int32, (blk_q, blk_kv), 1)
+    mask = jnp.ones((blk_q, blk_kv), jnp.bool_)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[...]                              # [blk_q, 1]
+    l_prev = l_scr[...]
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)
+    p = jnp.where(mask, p, 0.0)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        o_ref[...] = (acc_scr[...]
+                      / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: Array, k: Array, v: Array, *,
+                           causal: bool = True, window: int = 0,
+                           q_offset: int = 0, blk_q: int = 128,
+                           blk_kv: int = 128,
+                           interpret: bool = False) -> Array:
+    """q: [B, Sq, H, hd]; k, v: [B, Skv, KV, hd] -> [B, Sq, H, hd]."""
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    blk_q = min(blk_q, sq)
+    blk_kv = min(blk_kv, skv)
+    assert sq % blk_q == 0 and skv % blk_kv == 0, (sq, skv, blk_q, blk_kv)
+    nq = sq // blk_q
+    nk = skv // blk_kv
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window, q_offset=q_offset,
+        blk_q=blk_q, blk_kv=blk_kv, n_kv_blocks=nk, scale=scale)
+
+    grid = (b, h, nq, nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, blk_q, None, hd),
+                         lambda b_, h_, qi, ki: (b_, qi, h_, 0)),
+            pl.BlockSpec((None, blk_kv, None, hd),
+                         lambda b_, h_, qi, ki, kvh=kvh, h=h:
+                         (b_, ki, h_ * kvh // h, 0)),
+            pl.BlockSpec((None, blk_kv, None, hd),
+                         lambda b_, h_, qi, ki, kvh=kvh, h=h:
+                         (b_, ki, h_ * kvh // h, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, blk_q, None, hd),
+                               lambda b_, h_, qi, ki: (b_, qi, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pl_scratch((blk_q, 1), jnp.float32),
+            pl_scratch((blk_q, 1), jnp.float32),
+            pl_scratch((blk_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out
+
+
+def pl_scratch(shape, dtype):
+    from jax.experimental import pallas as pl_mod
+    try:
+        return pl_mod.VMEM(shape, dtype)          # newer API
+    except AttributeError:
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.VMEM(shape, dtype)

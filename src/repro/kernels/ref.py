@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                        window: int = 0, q_offset: int = 0) -> Array:
+    """Dense attention oracle.  q: [B, Sq, H, hd]; k, v: [B, Skv, KV, hd]
+    (GQA: head h attends kv head h * KV // H)."""
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    groups = h // kvh
+    qg = q.reshape(b, sq, kvh, groups, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def jacobi_step_ref(u: Array, f: Array) -> Array:
+    """5-point Jacobi sweep on the interior of u ([M, N], Dirichlet
+    boundary rows/cols held fixed)."""
+    new = 0.25 * (u[:-2, 1:-1] + u[2:, 1:-1] + u[1:-1, :-2] + u[1:-1, 2:]
+                  - f[1:-1, 1:-1])
+    return u.at[1:-1, 1:-1].set(new.astype(u.dtype))

@@ -1,0 +1,334 @@
+"""Compiled-HLO static analyzer: loop-weighted FLOPs, HBM bytes, and
+collective link-bytes for the roofline.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, which makes
+it useless for scanned-layer programs (a 96-layer scan under-counts 96x).
+Instead we parse the optimised module text:
+
+  * split into computations; follow ``while(body=%comp)`` edges weighted by
+    the ``known_trip_count`` backend config (nested loops multiply);
+  * FLOPs: every ``dot`` costs 2 * prod(result dims) * prod(contracting
+    dims) (operand shapes resolved through a per-computation symbol table);
+  * HBM bytes: every materialising op (fusion/dot/copy/scatter/...) reads
+    its operands and writes its result once — the post-fusion module makes
+    this a good HBM-traffic model;
+  * collectives: converted to per-chip ICI link bytes with ring algebra:
+        all-gather          (n-1)/n * result
+        reduce-scatter      (n-1)   * result
+        all-reduce          2(n-1)/n * result
+        all-to-all          (n-1)/n * result
+        collective-permute  result
+    (n = replica group size parsed per op).
+
+Conditional branches are counted at multiplier 1 each (upper bound).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+#: ops whose operands/results we count as HBM traffic.  Bare layout /
+#: elementwise ops (transpose, reshape, broadcast, convert, tanh, ...) are
+#: EXCLUDED: they appear standalone in CPU HLO but fuse into neighbours on
+#: the TPU target; fusions already account for their traffic.
+_MATERIALIZING = _COLLECTIVES + (
+    "fusion", "dot", "convolution", "copy",
+    "concatenate", "slice", "dynamic-slice", "dynamic-update-slice",
+    "scatter", "gather", "reduce", "reduce-window", "sort", "pad")
+
+_SHAPE_RE = re.compile(
+    r"\b([a-z]+[0-9]*(?:e[0-9]+m[0-9]+(?:fn)?)?)\[([0-9,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.-]+|[\w.-]+)\s*=\s*"
+    r"(\([^()]*\)|[a-z0-9_]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"([a-z][\w-]*)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?(%[\w.-]+|[\w.-]+)\s+\(.*\)\s*->")
+_OPERAND_RE = re.compile(r"%[\w.-]+|\b[a-z][\w.-]*\b")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_BODY_RE = re.compile(r"body=(%[\w.-]+|[\w.-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CALLS_RE = re.compile(r"calls=(%[\w.-]+|[\w.-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_elems_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _result_dims(result: str) -> tuple[str, list[int]]:
+    m = _SHAPE_RE.search(result)
+    if not m:
+        return "", []
+    dtype, dims = m.group(1), m.group(2)
+    return dtype, [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    result: str
+    op: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[OpInfo]
+    shapes: dict[str, str]
+
+
+def _parse(text: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    entry = ""
+    cur: Computation | None = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and line.rstrip().endswith("{"):
+            name = mc.group(2).lstrip("%")
+            cur = Computation(name=name, ops=[], shapes={})
+            comps[name] = cur
+            if mc.group(1):
+                entry = name
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        md = _DEF_RE.match(line)
+        if md:
+            name = md.group(1).lstrip("%")
+            result, op, rest = md.group(2), md.group(3), md.group(4)
+            cur.ops.append(OpInfo(name=name, result=result, op=op,
+                                  rest=rest))
+            cur.shapes[name] = result
+    return comps, entry
+
+
+def _multipliers(comps: dict[str, Computation], entry: str
+                 ) -> dict[str, float]:
+    mult: dict[str, float] = {entry: 1.0}
+    queue = [entry]
+    while queue:
+        cname = queue.pop()
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for op in comp.ops:
+            if op.op == "while":
+                body = _BODY_RE.search(op.rest)
+                trip = _TRIP_RE.search(op.rest)
+                n = int(trip.group(1)) if trip else 1
+                if body:
+                    b = body.group(1).lstrip("%")
+                    mult[b] = mult.get(b, 0.0) + m * n
+                    queue.append(b)
+            elif op.op == "conditional":
+                br = _BRANCHES_RE.search(op.rest)
+                if br:
+                    for b in br.group(1).split(","):
+                        b = b.strip().lstrip("%")
+                        mult[b] = mult.get(b, 0.0) + m
+                        queue.append(b)
+            elif op.op in ("call", "async-start"):
+                c = _CALLS_RE.search(op.rest)
+                if c:
+                    b = c.group(1).lstrip("%")
+                    mult[b] = mult.get(b, 0.0) + m
+                    queue.append(b)
+    return mult
+
+
+def _operands(op: OpInfo) -> list[str]:
+    # operand list = leading %refs before any attribute (key=value)
+    depth = 0
+    out = []
+    token = ""
+    for ch in op.rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        token += ch
+    for t in token.split(","):
+        t = t.strip()
+        if t.startswith("%"):
+            out.append(t.lstrip("%"))
+        elif re.fullmatch(r"[\w.-]+", t or "#"):
+            out.append(t)
+    return out
+
+
+def _dot_flops(op: OpInfo, shapes: dict[str, str]) -> float:
+    dtype, rdims = _result_dims(op.result)
+    operands = _operands(op)
+    if not operands:
+        return 0.0
+    lhs = shapes.get(operands[0], "")
+    _, ldims = _result_dims(lhs)
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    contracted = 1
+    if mc and mc.group(1):
+        for d in mc.group(1).split(","):
+            if int(d) < len(ldims):
+                contracted *= ldims[int(d)]
+    return 2.0 * float(max(contracted, 1)) * float(math.prod(rdims or [0]))
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _link_bytes(op: str, result_bytes: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-gather":
+        return (n - 1) / n * result_bytes
+    if op == "reduce-scatter":
+        return (n - 1) * result_bytes
+    if op == "all-reduce":
+        return 2 * (n - 1) / n * result_bytes
+    if op == "all-to-all":
+        return (n - 1) / n * result_bytes
+    if op == "collective-permute":
+        return float(result_bytes)
+    return 0.0
+
+
+def analyze_hlo_text(text: str, default_group: int = 2) -> dict[str, Any]:
+    comps, entry = _parse(text)
+    mult = _multipliers(comps, entry)
+
+    flops = 0.0
+    hbm = 0.0
+    coll_bytes: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    coll_counts: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    # only walk computations reachable via control flow (fusion bodies are
+    # costed at their call sites)
+    for cname, m in mult.items():
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            base = op.op.replace("-start", "")
+            if base in ("while", "conditional", "parameter", "constant",
+                        "tuple", "get-tuple-element", "bitcast",
+                        "after-all", "partition-id"):
+                continue
+            if op.op.endswith("-done"):
+                continue
+            rbytes = _shape_elems_bytes(op.result)
+            if base in _COLLECTIVES:
+                n = _group_size(op.rest, default_group)
+                payload = rbytes
+                if op.result.startswith("("):
+                    # async start tuples: take the largest element
+                    payload = max(
+                        (_shape_elems_bytes(f"{d}[{s}]")
+                         for d, s in _SHAPE_RE.findall(op.result)),
+                        default=0)
+                coll_bytes[base] += m * _link_bytes(base, payload, n)
+                coll_counts[base] += m
+                hbm += m * payload
+                continue
+            if base == "dot":
+                flops += m * _dot_flops(op, comp.shapes)
+            if base in _MATERIALIZING:
+                if base == "dynamic-update-slice":
+                    # in-place update: traffic = the updated slice (read +
+                    # write), NOT the whole buffer
+                    ops_ = _operands(op)
+                    upd = (_shape_elems_bytes(comp.shapes.get(ops_[1], ""))
+                           if len(ops_) > 1 else 0)
+                    hbm += m * 2 * upd if upd >= 1 << 20 else 0
+                    continue
+                if base == "dynamic-slice":
+                    hbm += m * 2 * rbytes if rbytes >= 1 << 20 else 0
+                    continue
+                # HBM-traffic model: count only >=1 MiB tensors (smaller
+                # intermediates live in VMEM/registers on the TPU target)
+                opbytes = sum(
+                    b for b in (_shape_elems_bytes(comp.shapes.get(o, ""))
+                                for o in _operands(op))
+                    if b >= 1 << 20)
+                if rbytes < 1 << 20:
+                    rbytes = 0
+                hbm += m * (rbytes + opbytes)
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "collective_bytes": sum(coll_bytes.values()),
+        "collective_detail": {"bytes_per_kind": coll_bytes,
+                              "counts": coll_counts},
+    }
+
+
+def analyze_compiled(compiled, n_chips: int) -> dict[str, Any]:
+    """Roofline inputs for one compiled cell.  All numbers are PER CHIP
+    (the SPMD module is the per-device program)."""
+    raw_cost = compiled.cost_analysis()
+    if isinstance(raw_cost, (list, tuple)):
+        raw_cost = raw_cost[0]
+    try:
+        mem = compiled.memory_analysis()
+        mem_stats = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+            "peak_bytes": int(
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+                - getattr(mem, "alias_size_in_bytes", 0)),
+        }
+    except Exception:                                    # backend-dependent
+        mem_stats = {}
+    stats = analyze_hlo_text(compiled.as_text())
+    return {
+        "n_chips": n_chips,
+        "flops_per_chip": stats["flops"],
+        "hbm_bytes_per_chip": stats["hbm_bytes"],
+        "collective_bytes_per_chip": stats["collective_bytes"],
+        "collective_detail": stats["collective_detail"],
+        "raw_cost_analysis": {
+            "flops_body_once": float(raw_cost.get("flops", 0.0)),
+            "bytes_body_once": float(raw_cost.get("bytes accessed", 0.0)),
+        },
+        "memory": mem_stats,
+    }

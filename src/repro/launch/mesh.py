@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state.  Shapes:
+
+  * single pod:  (16, 16)      axes ("data", "model")   = 256 chips
+  * multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+
+The dry-run (launch/dryrun.py) materialises these over 512 forced host
+devices; real deployments get them from the TPU slice topology.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, multi_pod: bool = False) -> Mesh:
+    """8-device miniature with the same axis structure (CI / CPU tests)."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,82 @@
+"""Training driver CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-34b \
+        --reduced --steps 20 [--mdmp-mode auto|bulk|interleaved] [--resume]
+
+Full (non-reduced) configs need a real TPU slice; on this host use
+--reduced (the same code path at toy scale).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.data.pipeline import DataConfig, SyntheticLMData
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.sharding import MeshCtx
+from repro.train.train_loop import TrainLoop, TrainLoopConfig, \
+    build_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.list_archs())
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mdmp-mode", default="auto",
+                    choices=["auto", "bulk", "interleaved"])
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. 2x4 (data x model); default = all devices "
+                         "on data")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = (configs.get_reduced(args.arch) if args.reduced
+           else configs.get_config(args.arch))
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        axes = (("pod", "data", "model") if len(dims) == 3
+                else ("data", "model"))
+    else:
+        dims = (jax.device_count(), 1)
+        axes = ("data", "model")
+    mesh = jax.make_mesh(dims, axes)
+    ctx = MeshCtx.from_mesh(mesh, mdmp_mode=args.mdmp_mode)
+    model = Model(cfg, ctx)
+    print(f"arch={args.arch} params={cfg.param_count()/1e6:.1f}M "
+          f"mesh={dims} mdmp={args.mdmp_mode}")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 10),
+                          total_steps=args.steps,
+                          moment_dtype=cfg.moment_dtype)
+    step_fn, pshard, bshard = build_train_step(
+        model, opt_cfg, mesh, compress_pod=args.compress_pod)
+    data = SyntheticLMData(DataConfig(vocab_size=cfg.vocab_size,
+                                      seq_len=args.seq,
+                                      global_batch=args.batch))
+    loop = TrainLoop(step_fn, model, opt_cfg, data,
+                     TrainLoopConfig(total_steps=args.steps,
+                                     ckpt_every=max(5, args.steps // 4),
+                                     ckpt_dir=args.ckpt),
+                     pshard, bshard)
+    params, opt, s0 = (loop.resume_or_init() if args.resume
+                       else loop.init_state())
+    out = loop.run(params, opt, s0)
+    for h in out["history"][:: max(1, len(out["history"]) // 10)]:
+        print(f"  step {h['step']:4d} loss {h['loss']:.4f} "
+              f"{h['time_s']:.2f}s")
+    print(f"done at step {out['step']}, final loss "
+          f"{out['history'][-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

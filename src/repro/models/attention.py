@@ -1,0 +1,356 @@
+"""Attention — SP flow (train/prefill) and TP-2D decode flow.
+
+SP flow (x sequence-sharded over ``model``):
+  * fused QKV all-gather-matmul ring: ONE ring gathers the sequence while
+    computing Q (this rank's heads) and K/V (replicated kv weights —
+    GQA kv_heads < TP, DESIGN.md §3.3) — MDMP intermingling;
+  * blockwise (flash) attention over full sequence for local heads;
+  * output projection as matmul-reduce-scatter back to sequence shards.
+
+Decode flow (batch replicated; KV cache sharded over data × model on the
+sequence dim):
+  * q/k/v via weight-stationary psum('data') contractions;
+  * all-gather q heads over 'model' (tiny), partial attention on the local
+    cache slice, LSE merge via pmax+psum over BOTH cache axes
+    (flash-decoding, distributed);
+  * o-projection row-parallel with psum('model').
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core import managed
+from repro.core.overlap import fsdp_gather
+from repro.models import layers
+from repro.parallel.sharding import MeshCtx
+
+Array = jax.Array
+
+
+def padded_kv_heads(cfg: ModelConfig) -> int:
+    """Smallest kv-head count >= n_kv_heads that divides padded_heads."""
+    h = cfg.padded_heads
+    kv = max(1, cfg.n_kv_heads)
+    while h % kv:
+        kv += 1
+    return kv
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (reference path; the Pallas flash kernel plugs in via
+# kernels/flash_attention/ops.py for the same signature)
+# ---------------------------------------------------------------------------
+
+
+def attend(q: Array, k: Array, v: Array, *, causal: bool,
+           window: int = 0, q_offset: int = 0,
+           use_kernel: bool = True) -> Array:
+    """q: [B, Sq, H, hd]; k, v: [B, Skv, KV, hd]; GQA via head grouping.
+    ``q_offset``: global position of q[0] relative to k[0] (SP/decode).
+    ``window`` > 0: sliding-window attention."""
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        if kernel_ops.flash_attention_applicable(q, k, v):
+            return kernel_ops.flash_attention(
+                q, k, v, causal=causal, window=window, q_offset=q_offset)
+    return attend_ref(q, k, v, causal=causal, window=window,
+                      q_offset=q_offset)
+
+
+def attend_ref(q: Array, k: Array, v: Array, *, causal: bool,
+               window: int = 0, q_offset: int = 0) -> Array:
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    groups = h // kvh
+    qg = q.reshape(b, sq, kvh, groups, hd)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def _local_kv_slice(k: Array, v: Array, cfg: ModelConfig, ctx: MeshCtx
+                    ) -> tuple[Array, Array, int]:
+    """Slice replicated kv heads to the range this rank's q heads use.
+
+    q heads are contiguous per rank ([r*h_loc, (r+1)*h_loc)); with group
+    size g = Hp / KVp the kv range is [(r*h_loc)//g, ...) of uniform size
+    (KVp | tp or tp | KVp — guaranteed by padded_kv_heads + tp powers of
+    two).
+    """
+    tp = ctx.tp
+    hp = cfg.padded_heads
+    kvp = padded_kv_heads(cfg)
+    h_loc = hp // tp
+    g = hp // kvp                       # q heads per kv head
+    kv_count = max(1, h_loc // g)
+    assert h_loc % max(min(g, h_loc), 1) == 0, (h_loc, g)
+    if kv_count == kvp:
+        return k, v, kvp
+    r = lax.axis_index("model")
+    lo = (r * h_loc) // g
+    k = lax.dynamic_slice_in_dim(k, lo, kv_count, axis=2)
+    v = lax.dynamic_slice_in_dim(v, lo, kv_count, axis=2)
+    return k, v, kv_count
+
+
+# ---------------------------------------------------------------------------
+# SP flow (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def attention_sp(x: Array, params: dict, cfg: ModelConfig, ctx: MeshCtx, *,
+                 causal: bool = True, window: int = 0,
+                 positions_offset: int = 0,
+                 return_kv: bool = False) -> Any:
+    """x: [B, S_loc, D] -> [B, S_loc, D].  When ``return_kv`` (prefill),
+    also returns this rank's (k, v) sequence slice for the cache."""
+    b, s_loc, d = x.shape
+    tp = ctx.tp
+    h_loc = cfg.padded_heads // tp
+    kvh = padded_kv_heads(cfg)
+    hd = cfg.head_dim
+
+    # w_q: [D(data), H(model)*hd]; w_kv: [D(data), 2*KVp*hd] (replicated
+    # over model — GQA kv_heads < TP); one ring computes both.
+    wq = fsdp_gather(params["w_q"], "data", mode=ctx.mdmp_mode)
+    wkv = fsdp_gather(params["w_kv"], "data", mode=ctx.mdmp_mode)
+    wo = fsdp_gather(params["w_o"], "data", axis=1, mode=ctx.mdmp_mode)
+
+    x2 = layers.to_ring(x)
+    q2, kv2 = managed.all_gather_matmul_multi(x2, [wq, wkv], "model",
+                                              mode=ctx.mdmp_mode)
+    s_full = q2.shape[0] // b
+    q = layers.from_ring(q2, b).reshape(b, s_full, h_loc, hd)
+    kv = layers.from_ring(kv2, b)
+    k, v = jnp.split(kv, 2, axis=-1)
+    k = k.reshape(b, s_full, kvh, hd)
+    v = v.reshape(b, s_full, kvh, hd)
+
+    if not cfg.attention_free and cfg.rope_theta > 0:
+        pos = positions_offset + jnp.arange(s_full)
+        q = layers.apply_rope(q, pos, cfg.rope_theta)
+        k = layers.apply_rope(k, pos, cfg.rope_theta)
+
+    # GQA under TP: this rank's contiguous q heads attend a contiguous kv
+    # slice (kv weights are replicated; slice to the local group range).
+    # The cache (return_kv) keeps ALL kv heads — decode needs every head.
+    k_att, v_att, _ = _local_kv_slice(k, v, cfg, ctx)
+    o = attend(q, k_att, v_att, causal=causal, window=window)
+    o2 = layers.to_ring(o.reshape(b, s_full, h_loc * hd))
+    y2 = managed.matmul_reduce_scatter(o2, wo, "model", mode=ctx.mdmp_mode)
+    y = layers.from_ring(y2.astype(x.dtype), b)
+    if return_kv:
+        # This rank keeps its own sequence slice of the (replicated) kv.
+        r = lax.axis_index("model")
+        k_slice = lax.dynamic_slice_in_dim(k, r * s_loc, s_loc, axis=1)
+        v_slice = lax.dynamic_slice_in_dim(v, r * s_loc, s_loc, axis=1)
+        return y, (k_slice, v_slice)
+    return y
+
+
+def attention_sp_ulysses(x: Array, params: dict, cfg: ModelConfig,
+                         ctx: MeshCtx, *, causal: bool = True,
+                         window: int = 0,
+                         return_kv: bool = False) -> Any:
+    """Ulysses-style attention (beyond-paper §Perf option): instead of
+    all-gathering the SEQUENCE for the qkv matmuls (bytes ∝ S·B·D), gather
+    the q/o WEIGHTS over 'model' (bytes ∝ D·H·hd) and switch
+    seq-sharding <-> head-sharding with a managed all_to_all
+    (bytes ∝ S·B·D / tp).  For long-context prefill the activation term
+    dominates, so this cuts attention comm ~tp-fold.  Numerically
+    identical to attention_sp (tests assert it).
+    """
+    b, s_loc, d = x.shape
+    tp = ctx.tp
+    hp = cfg.padded_heads
+    h_loc = hp // tp
+    kvh = padded_kv_heads(cfg)
+    hd = cfg.head_dim
+
+    # full q/o weights: FSDP gather (data) + TP gather (model, columns)
+    wq = fsdp_gather(params["w_q"], "data", mode=ctx.mdmp_mode)
+    wq = fsdp_gather(wq, "model", axis=1, mode=ctx.mdmp_mode)  # [D, H*hd]
+    wkv = fsdp_gather(params["w_kv"], "data", mode=ctx.mdmp_mode)
+    wo = fsdp_gather(params["w_o"], "data", axis=1, mode=ctx.mdmp_mode)
+    wo = fsdp_gather(wo, "model", axis=0, mode=ctx.mdmp_mode)  # [H*hd, D]
+
+    # local-seq projections with FULL heads
+    q = jnp.dot(x, wq).reshape(b, s_loc, hp, hd)
+    kv = jnp.dot(x, wkv)
+    k, v = jnp.split(kv, 2, axis=-1)
+    k = k.reshape(b, s_loc, kvh, hd)
+    v = v.reshape(b, s_loc, kvh, hd)
+
+    r = lax.axis_index("model")
+    if cfg.rope_theta > 0:
+        pos = r * s_loc + jnp.arange(s_loc)
+        q = layers.apply_rope(q, pos, cfg.rope_theta)
+        k = layers.apply_rope(k, pos, cfg.rope_theta)
+
+    # head<->seq switch: [B, S_loc, H, hd] -> [B, S, H_loc, hd]
+    qt = managed.managed_all_to_all(
+        q.transpose(1, 0, 2, 3), "model", 2, 0,
+        ctx.mdmp_mode)                                   # [S, B, H_loc, hd]
+    qt = qt.transpose(1, 0, 2, 3)
+    # kv heads are few: plain seq all-gather (tiny)
+    kg = layers.from_ring(managed.managed_all_gather(
+        layers.to_ring(k.reshape(b, s_loc, kvh * hd)), "model",
+        ctx.mdmp_mode), b).reshape(b, s_loc * tp, kvh, hd)
+    vg = layers.from_ring(managed.managed_all_gather(
+        layers.to_ring(v.reshape(b, s_loc, kvh * hd)), "model",
+        ctx.mdmp_mode), b).reshape(b, s_loc * tp, kvh, hd)
+
+    k_att, v_att, _ = _local_kv_slice(kg, vg, cfg, ctx)
+    o = attend(qt, k_att, v_att, causal=causal, window=window)
+
+    # switch back: [B, S, H_loc, hd] -> [B, S_loc, H, hd]
+    ot = managed.managed_all_to_all(
+        o.transpose(1, 0, 2, 3), "model", 0, 2, ctx.mdmp_mode)
+    ot = ot.transpose(1, 0, 2, 3).reshape(b, s_loc, hp * hd)
+    y = jnp.dot(ot, wo).astype(x.dtype)                  # no psum needed
+    if return_kv:
+        return y, (k, v)   # this rank's seq slice, all kv heads
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Decode flow
+# ---------------------------------------------------------------------------
+
+
+def cache_axes(ctx: MeshCtx) -> tuple[str, ...]:
+    """Mesh axes the KV-cache sequence dim is sharded over."""
+    return (("pod", "data", "model") if ctx.has_pod else ("data", "model"))
+
+
+def cache_shards(ctx: MeshCtx) -> int:
+    n = 1
+    for ax in cache_axes(ctx):
+        n *= ctx.axis_sizes[ax]
+    return n
+
+
+def _cache_rank(ctx: MeshCtx) -> Array:
+    """Linear rank of this device along the cache sharding axes."""
+    r = jnp.int32(0)
+    for ax in cache_axes(ctx):
+        r = r * ctx.axis_sizes[ax] + lax.axis_index(ax)
+    return r
+
+
+def attention_decode(x: Array, kv_cache: tuple[Array, Array], pos: Array,
+                     params: dict, cfg: ModelConfig, ctx: MeshCtx, *,
+                     window: int = 0) -> tuple[Array, tuple[Array, Array]]:
+    """One-token decode attention.
+
+    x:        [B, D_loc(data)] (batch replicated over the mesh)
+    kv_cache: (k, v) each [B, S_shard, KV, hd] — sequence sharded over
+              cache_axes(ctx); for SWA layers S_shard covers the window.
+    pos:      [] int32 — global position being written/attended.
+    Returns (y [B, D_loc(data)], updated cache).
+    """
+    b = x.shape[0]
+    tp = ctx.tp
+    h = cfg.padded_heads
+    h_loc = h // tp
+    kvh = padded_kv_heads(cfg)
+    hd = cfg.head_dim
+    k_cache, v_cache = kv_cache
+    s_shard = k_cache.shape[1]
+
+    # qkv: weight-stationary contraction over the FSDP dim.
+    qkv = managed.managed_all_reduce(
+        jnp.concatenate([jnp.dot(x, params["w_q"]),
+                         jnp.dot(x, params["w_kv"])], axis=-1),
+        "data", mode=ctx.mdmp_mode)
+    q, knew, vnew = jnp.split(qkv, [h_loc * hd, h_loc * hd + kvh * hd],
+                              axis=-1)
+    q = q.reshape(b, h_loc, hd)
+    knew = knew.reshape(b, kvh, hd)
+    vnew = vnew.reshape(b, kvh, hd)
+
+    if cfg.rope_theta > 0:
+        posv = pos[None] if pos.ndim == 0 else pos
+        q = layers.apply_rope(q[:, None], posv, cfg.rope_theta)[:, 0]
+        knew = layers.apply_rope(knew[:, None], posv, cfg.rope_theta)[:, 0]
+
+    # Cache write: the shard owning ``pos`` (ring-buffer slot for SWA).
+    n_shards = cache_shards(ctx)
+    slot_global = pos if window <= 0 else pos % (s_shard * n_shards)
+    owner = slot_global // s_shard
+    slot = slot_global % s_shard
+    me = _cache_rank(ctx)
+    is_mine = (owner == me)
+    k_upd = lax.dynamic_update_slice_in_dim(k_cache, knew[:, None], slot,
+                                            axis=1)
+    v_upd = lax.dynamic_update_slice_in_dim(v_cache, vnew[:, None], slot,
+                                            axis=1)
+    k_cache = jnp.where(is_mine, k_upd, k_cache)
+    v_cache = jnp.where(is_mine, v_upd, v_cache)
+
+    # All heads everywhere (tiny), partial attention on the local slice.
+    q_all = managed.managed_all_gather(
+        q.transpose(1, 0, 2), "model", mode=ctx.mdmp_mode)  # [H, B, hd]
+    q_all = q_all.transpose(1, 0, 2)                        # [B, H, hd]
+
+    groups = h // kvh
+    qg = q_all.reshape(b, kvh, groups, hd)
+    scale = 1.0 / math.sqrt(hd)
+    # accumulate in f32 WITHOUT materialising an f32 copy of the cache
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+
+    # validity: global slot index of each local cache slot <= pos
+    slot_ids = me * s_shard + jnp.arange(s_shard)            # [Ss]
+    if window > 0:
+        # ring buffer: slot holds position p iff p % ring == slot_global
+        ring = s_shard * n_shards
+        base = (pos + 1) - ring
+        cand = jnp.where(slot_ids <= pos % ring,
+                         (pos // ring) * ring + slot_ids,
+                         (pos // ring - 1) * ring + slot_ids)
+        valid = (cand >= jnp.maximum(0, pos + 1 - window)) & (cand <= pos)
+    else:
+        valid = slot_ids <= pos
+    logits = jnp.where(valid[None, None, None], logits, -jnp.inf)
+
+    m_loc = jnp.max(logits, axis=-1)                          # [B,KV,G]
+    m_glob = lax.pmax(m_loc, cache_axes(ctx))
+    p = jnp.exp(logits - m_glob[..., None])
+    p = jnp.where(valid[None, None, None], p, 0.0)
+    l_loc = jnp.sum(p, axis=-1)
+    o_loc = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                       preferred_element_type=jnp.float32)
+    l_glob = l_loc
+    o_glob = o_loc
+    for ax in cache_axes(ctx):
+        l_glob = managed.managed_all_reduce(l_glob, ax)
+        o_glob = managed.managed_all_reduce(o_glob, ax)
+    o = (o_glob / jnp.maximum(l_glob[..., None], 1e-30))
+    o = o.reshape(b, h, hd).astype(x.dtype)
+
+    # o-projection: my model-axis head block, row-parallel psum('model').
+    r_m = lax.axis_index("model")
+    o_my = lax.dynamic_slice_in_dim(o, r_m * h_loc, h_loc, axis=1)
+    y = managed.managed_all_reduce(
+        jnp.dot(o_my.reshape(b, h_loc * hd), params["w_o"]), "model",
+        mode=ctx.mdmp_mode)
+    return y.astype(x.dtype), (k_cache, v_cache)

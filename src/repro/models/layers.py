@@ -1,0 +1,285 @@
+"""Shared layers — norms, MLPs, embeddings, RoPE — in the explicit
+shard_map world.
+
+Layout conventions (training / prefill — the "SP flow"):
+  * residual stream  x:  [B, S_loc, D]   (sequence sharded over ``model``)
+  * ring-op layout   x2: [S_loc * B, D]  (S-major rows so ring all-gather
+                         along axis 0 yields rank-ordered full sequence)
+  * weights arrive as LOCAL shards; the FSDP (``data``) dimension is
+    gathered on use via mdmp.fsdp_gather (whose autodiff transpose is the
+    as-ready reduce-scatter of the gradient — the paper's send-on-last-
+    write applied to gradients).
+
+Decode flow ("TP-2D"): batch replicated, alternating psum axes; see
+attention.py and model.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core import managed
+from repro.core.overlap import fsdp_gather
+from repro.parallel.sharding import MeshCtx
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Layout shuffles between [B, S_loc, D] and the S-major ring layout
+# ---------------------------------------------------------------------------
+
+
+def to_ring(x: Array) -> Array:
+    """[B, S_loc, D] -> [S_loc*B, D] (S-major)."""
+    b, s, d = x.shape
+    return x.transpose(1, 0, 2).reshape(s * b, d)
+
+
+def from_ring(x2: Array, batch: int) -> Array:
+    """[S*B, D] -> [B, S, D]."""
+    sb, d = x2.shape
+    s = sb // batch
+    return x2.reshape(s, batch, d).transpose(1, 0, 2)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, scale: Array, eps: float) -> Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def rms_norm_sharded(x: Array, scale_loc: Array, eps: float,
+                     axis_name: str) -> Array:
+    """RMSNorm over a feature dim sharded across ``axis_name`` (decode
+    flow): only the scalar sum-of-squares crosses the link."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    ssq = jnp.sum(xf * xf, axis=-1, keepdims=True)
+    d_total = x.shape[-1] * lax.psum(1, axis_name)
+    var = managed.managed_all_reduce(ssq, axis_name) / d_total
+    out = xf * lax.rsqrt(var + eps)
+    return (out * (1.0 + scale_loc.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLP
+# ---------------------------------------------------------------------------
+
+
+def activation(name: str, u: Array, g: Array | None) -> Array:
+    """Gated (u = gate, g = linear) or plain activation."""
+    if name == "swiglu":
+        return jax.nn.silu(u) * g
+    if name == "geglu":
+        return jax.nn.gelu(u) * g
+    if name == "relu2":
+        r = jax.nn.relu(u)
+        return r * r
+    if name == "gelu":
+        return jax.nn.gelu(u)
+    raise ValueError(name)
+
+
+def gated(name: str) -> bool:
+    return name in ("swiglu", "geglu")
+
+
+def mlp_block_sp(x: Array, params: dict, cfg: ModelConfig,
+                 ctx: MeshCtx) -> Array:
+    """Dense MLP, SP flow: AG-matmul up (+gate fused into one ring), local
+    activation, matmul-RS down.  x: [B, S_loc, D] -> same."""
+    b = x.shape[0]
+    w_up = fsdp_gather(params["w_up"], "data", mode=ctx.mdmp_mode)
+    w_down = fsdp_gather(params["w_down"], "data", axis=1,
+                         mode=ctx.mdmp_mode)
+    x2 = to_ring(x)
+    if gated(cfg.mlp):
+        w_gate = fsdp_gather(params["w_gate"], "data", mode=ctx.mdmp_mode)
+        # ONE ring gathers the sequence while computing up AND gate columns.
+        u, g = managed.all_gather_matmul_multi(x2, [w_up, w_gate], "model",
+                                               mode=ctx.mdmp_mode)
+        h = activation(cfg.mlp, u, g)
+    else:
+        u2 = managed.all_gather_matmul(x2, w_up, "model",
+                                       mode=ctx.mdmp_mode)
+        h = activation(cfg.mlp, u2, None)
+    y2 = managed.matmul_reduce_scatter(h, w_down, "model",
+                                       mode=ctx.mdmp_mode)
+    return from_ring(y2.astype(x.dtype), b)
+
+
+def mlp_block_decode(x: Array, params: dict, cfg: ModelConfig,
+                     ctx: MeshCtx) -> Array:
+    """Dense MLP, decode flow (TP-2D): x [B, D_loc(data)] -> same.
+    Weight-stationary: contract the FSDP dim with psum('data'), come back
+    with psum('model')."""
+    if gated(cfg.mlp):
+        ug = managed.managed_all_reduce(
+            jnp.concatenate([jnp.dot(x, params["w_up"]),
+                             jnp.dot(x, params["w_gate"])], axis=-1),
+            "data", mode=ctx.mdmp_mode)
+        uu, g = jnp.split(ug, 2, axis=-1)
+        h = activation(cfg.mlp, uu, g)
+    else:
+        u = managed.managed_all_reduce(
+            jnp.dot(x, params["w_up"]), "data", mode=ctx.mdmp_mode)
+        h = activation(cfg.mlp, u, None)
+    y = managed.managed_all_reduce(
+        jnp.dot(h, params["w_down"]), "model", mode=ctx.mdmp_mode)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + loss (vocab-parallel over the ``model`` axis)
+# ---------------------------------------------------------------------------
+
+
+def embed_sp(tokens: Array, table_loc: Array, cfg: ModelConfig,
+             ctx: MeshCtx) -> Array:
+    """Vocab-parallel embedding lookup fused with the sequence scatter:
+    one-hot(tokens) @ table is a matmul whose contraction dim (vocab) is
+    sharded over ``model`` — exactly matmul_reduce_scatter's shape.  Each
+    ring step materialises the one-hot block for one sequence shard only.
+
+    tokens: [B, S] (replicated over model) -> x [B, S_loc, D].
+    """
+    b, s = tokens.shape
+    v_loc = table_loc.shape[0]
+    # table_loc: [V_loc(model), D_loc(data)] — FSDP-gather columns on use.
+    if table_loc.shape[-1] != cfg.d_model:
+        table = fsdp_gather(table_loc, "data", axis=1, mode=ctx.mdmp_mode)
+    else:
+        table = table_loc
+    vidx = lax.axis_index("model") * v_loc
+    tok2 = tokens.transpose(1, 0).reshape(s * b)          # S-major
+    onehot = jax.nn.one_hot(tok2 - vidx, v_loc, dtype=table.dtype)
+    x2 = managed.matmul_reduce_scatter(onehot, table, "model",
+                                       mode=ctx.mdmp_mode)
+    return from_ring(x2, b)
+
+
+def embed_decode(tokens: Array, table_loc: Array, cfg: ModelConfig,
+                 ctx: MeshCtx) -> Array:
+    """Decode-flow lookup: tokens [B] (replicated) -> x [B, D_loc(data)].
+    table_loc: [V_loc(model), D_loc(data)]."""
+    v_loc = table_loc.shape[0]
+    vidx = lax.axis_index("model") * v_loc
+    onehot = jax.nn.one_hot(tokens - vidx, v_loc, dtype=table_loc.dtype)
+    partial = jnp.dot(onehot, table_loc)
+    return managed.managed_all_reduce(partial, "model", mode=ctx.mdmp_mode)
+
+
+def lm_loss_sp(x: Array, unembed_loc: Array, tokens: Array, cfg: ModelConfig,
+               ctx: MeshCtx, *, chunk: int = 512) -> tuple[Array, Array]:
+    """Cross-entropy over vocab-parallel logits, chunked over the sequence
+    so the [*, V_loc] logits tensor never fully materialises.
+
+    The final hidden is first gathered over 'model' (one MDMP ring) so that
+    every rank holds every position — the vocab-parallel reductions then
+    cross the model axis with position-replicated stats (mixing seq shards
+    with vocab shards in one psum would corrupt rows).
+
+    x: [B, S_loc, D]; unembed_loc: [D_loc(data), V_loc(model)];
+    tokens: [B, S] labels.  Returns (sum_loss_local / tp, count / tp) —
+    caller psums over ALL axes (the /tp cancels the model-axis
+    replication).
+    """
+    b, s_loc, d = x.shape
+    w = fsdp_gather(unembed_loc, "data", mode=ctx.mdmp_mode)   # [D, V_loc]
+    v_loc = w.shape[1]
+    vidx = lax.axis_index("model") * v_loc
+
+    x_full = from_ring(
+        managed.managed_all_gather(to_ring(x), "model",
+                                   mode=ctx.mdmp_mode), b)     # [B, S, D]
+    s = x_full.shape[1]
+    labels_all = tokens                                        # [B, S]
+
+    n_chunks = max(1, s // max(chunk, 1))
+    chunk = s // n_chunks
+
+    def body(carry, i):
+        loss_sum, count = carry
+        xs = lax.dynamic_slice_in_dim(x_full, i * chunk, chunk, axis=1)
+        lbl = lax.dynamic_slice_in_dim(labels_all, i * chunk, chunk, axis=1)
+        # bf16 operands with f32 accumulation: halves the CE read traffic
+        # (the memory-term hillclimb, EXPERIMENTS.md §Perf N-H3) at
+        # standard mixed-precision numerics
+        logits = jnp.dot(xs, w, preferred_element_type=jnp.float32)
+        logits = logits.astype(jnp.float32)
+        # vocab-parallel logsumexp: stats cross the model axis, logits don't
+        # (the max is a constant shift — stop_gradient keeps it out of AD)
+        lmax = lax.pmax(
+            lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True)),
+            "model")
+        lse = jnp.log(managed.managed_all_reduce(
+            jnp.sum(jnp.exp(logits - lmax), axis=-1, keepdims=True),
+            "model")) + lmax
+        onehot = jax.nn.one_hot(lbl - vidx, v_loc, dtype=jnp.float32)
+        tgt = managed.managed_all_reduce(
+            jnp.sum(logits * onehot, axis=-1, keepdims=True), "model")
+        nll = (lse - tgt)[..., 0]
+        valid = (lbl >= 0).astype(jnp.float32)
+        loss_sum = loss_sum + jnp.sum(nll * valid)
+        count = count + jnp.sum(valid)
+        return (loss_sum, count), None
+
+    (loss_sum, count), _ = lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), jnp.arange(n_chunks))
+    tp = ctx.tp
+    return loss_sum / tp, count / tp
+
+
+def logits_decode(x: Array, unembed_loc: Array, ctx: MeshCtx) -> Array:
+    """Decode-flow logits: x [B, D_loc(data)] @ W_un [D_loc, V_loc(model)]
+    -> psum('data') -> [B, V_loc(model)]."""
+    partial = jnp.dot(x, unembed_loc)
+    return managed.managed_all_reduce(partial, "data", mode=ctx.mdmp_mode)
+
+
+def greedy_sample(logits_loc: Array, ctx: MeshCtx) -> Array:
+    """Greedy decode across vocab-parallel logits [B, V_loc(model)]."""
+    v_loc = logits_loc.shape[-1]
+    vidx = lax.axis_index("model") * v_loc
+    local_max = jnp.max(logits_loc, axis=-1)
+    local_arg = jnp.argmax(logits_loc, axis=-1) + vidx
+    gmax = lax.pmax(local_max, "model")
+    cand = jnp.where(local_max >= gmax, local_arg, jnp.iinfo(jnp.int32).max)
+    return lax.pmin(cand.astype(jnp.int32), "model")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [B, S, H, hd]; positions: [S] (global positions)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    cos = jnp.cos(angles)[None, :, None, :]             # [1, S, 1, hd/2]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)

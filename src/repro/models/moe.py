@@ -1,0 +1,264 @@
+"""Mixture-of-Experts — two dispatch regimes (DESIGN.md §3.3):
+
+``ep_a2a``   (moonshot: 64 experts % TP16 == 0): experts sharded by expert
+  id over the ``model`` axis; capacity-limited token dispatch crosses the
+  axis via MDMP managed all_to_all (chunked/interleaved schedulable — the
+  paper's "send tokens for expert e as soon as routed").  Tokens stay in
+  their local sequence shard: no sequence gather needed at all.
+
+``expert_tp`` (grok: 8 experts on a TP16 axis): every expert's FFN is
+  sharded over the ``model`` axis like a dense MLP; dispatch is local
+  against the sequence-gathered activations and the down-projection
+  returns to sequence shards through a reduce-scatter ring.
+
+Dispatch is index-based (sort + gather, GShard capacity semantics) — the
+one-hot [T, E, C] dispatch tensor would be terabytes at 32k-token
+microbatches.  Both paths add a Switch-style load-balancing aux loss.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core import managed
+from repro.core.overlap import fsdp_gather
+from repro.models import layers
+from repro.parallel.sharding import MeshCtx
+
+Array = jax.Array
+
+
+def _router(x: Array, w_router: Array, n_experts: int, top_k: int
+            ) -> tuple[Array, Array, Array]:
+    """x: [T, D] -> (top-k gate weights [T, K] renormalised,
+    top-k expert ids [T, K], aux loss)."""
+    logits = jnp.dot(x.astype(jnp.float32), w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_idx = lax.top_k(probs, top_k)                # [T, K]
+    gates = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True),
+                                1e-9)
+    # Switch-style load-balance aux loss
+    mask = jnp.sum(jax.nn.one_hot(top_idx, n_experts, dtype=jnp.float32),
+                   axis=1)
+    me = jnp.mean(mask, axis=0)
+    pe = jnp.mean(probs, axis=0)
+    aux = n_experts * jnp.sum(me * pe)
+    return gates, top_idx, aux
+
+
+def dispatch_indices(top_idx: Array, n_experts: int, capacity: int
+                     ) -> tuple[Array, Array, Array]:
+    """Capacity-limited dispatch bookkeeping (index-based).
+
+    top_idx: [T, K] expert ids.  Returns
+      dest  [T*K] slot in the [E*C] buffer (or E*C for dropped entries),
+      tok   [T*K] source token of each (t, k) entry in expert-sorted order,
+      keep  [T*K] 1.0 where the entry fit under capacity.
+    """
+    t, k = top_idx.shape
+    flat_e = top_idx.reshape(t * k)
+    order = jnp.argsort(flat_e, stable=True)            # expert-major order
+    sorted_e = flat_e[order]
+    tok = order // k
+    # position of each entry within its expert's buffer
+    pos = jnp.arange(t * k) - jnp.searchsorted(sorted_e,
+                                               sorted_e, side="left")
+    keep = (pos < capacity).astype(jnp.float32)
+    dest = jnp.where(pos < capacity, sorted_e * capacity + pos,
+                     n_experts * capacity)               # overflow bucket
+    return dest, tok, keep, order
+
+
+def gather_to_buffers(x2: Array, dest: Array, tok: Array, keep: Array,
+                      n_experts: int, capacity: int) -> Array:
+    """x2: [T, D] -> expert buffers [E, C, D] (dropped tokens zeroed)."""
+    d = x2.shape[-1]
+    rows = x2[tok] * keep[:, None].astype(x2.dtype)
+    buf = jnp.zeros((n_experts * capacity + 1, d), x2.dtype)
+    buf = buf.at[dest].set(rows, mode="drop")
+    return buf[:-1].reshape(n_experts, capacity, d)
+
+
+def combine_from_buffers(out: Array, dest: Array, tok: Array, keep: Array,
+                         gates: Array, order: Array, t: int) -> Array:
+    """out: [E, C, D] -> y [T, D], weighting by the (t, k) gate.
+    dest/tok/keep are in expert-sorted order; ``order`` permutes the flat
+    [T*K] gate entries into that order."""
+    e, c, d = out.shape
+    flat = jnp.concatenate([out.reshape(e * c, d),
+                            jnp.zeros((1, d), out.dtype)])
+    k = gates.shape[1]
+    g = gates.reshape(t * k)[order]
+    rows = flat[dest] * (g * keep)[:, None].astype(out.dtype)
+    y = jnp.zeros((t, d), out.dtype)
+    return y.at[tok].add(rows)
+
+
+def _expert_ffn(h: Array, w1: Array, w1_gate: Array | None, w2: Array,
+                mlp: str) -> Array:
+    """Batched expert FFN.  h: [E, C, D]; w1 (+w1_gate): [E, D, F];
+    w2: [E, F, D]."""
+    u = jnp.einsum("ecd,edf->ecf", h, w1)
+    if layers.gated(mlp):
+        g = jnp.einsum("ecd,edf->ecf", h, w1_gate)
+        act = layers.activation(mlp, u, g)
+    else:
+        act = layers.activation(mlp, u, None)
+    return jnp.einsum("ecf,efd->ecd", act, w2)
+
+
+# ---------------------------------------------------------------------------
+# ep_a2a: expert-parallel all_to_all dispatch
+# ---------------------------------------------------------------------------
+
+
+def moe_block_ep(x: Array, params: dict, cfg: ModelConfig, ctx: MeshCtx
+                 ) -> tuple[Array, Array]:
+    """x: [B, S_loc, D] -> (y, aux_loss).  Experts sharded by id over
+    'model'; tokens routed across the axis with managed all_to_all."""
+    e_cfg = cfg.moe
+    b, s_loc, d = x.shape
+    t = b * s_loc
+    tp = ctx.tp
+    e = e_cfg.n_experts
+    cap = max(1, int(t * e_cfg.top_k / e * e_cfg.capacity_factor))
+
+    x2 = x.reshape(t, d)
+    gates, top_idx, aux = _router(x2, params["w_router"], e, e_cfg.top_k)
+    dest, tok, keep, order = dispatch_indices(top_idx, e, cap)
+    buffers = gather_to_buffers(x2, dest, tok, keep, e, cap)
+
+    # tokens cross the EP axis: [E, C, D] -> [E_loc, tp*C, D]
+    recv = managed.managed_all_to_all(
+        buffers, "model", split_axis=0, concat_axis=1, mode=ctx.mdmp_mode)
+
+    w1 = fsdp_gather(params["w1"], "data", axis=1, mode=ctx.mdmp_mode)
+    w1g = (fsdp_gather(params["w1_gate"], "data", axis=1,
+                       mode=ctx.mdmp_mode)
+           if layers.gated(cfg.mlp) else None)
+    w2 = fsdp_gather(params["w2"], "data", axis=2, mode=ctx.mdmp_mode)
+    out = _expert_ffn(recv, w1, w1g, w2, cfg.mlp)
+
+    # route results back and combine with gate weights
+    back = managed.managed_all_to_all(
+        out, "model", split_axis=1, concat_axis=0, mode=ctx.mdmp_mode)
+    y2 = combine_from_buffers(back, dest, tok, keep, gates, order, t)
+    return y2.reshape(b, s_loc, d).astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# expert_tp: each expert TP-sharded over 'model' (expert count < TP)
+# ---------------------------------------------------------------------------
+
+
+def moe_block_expert_tp(x: Array, params: dict, cfg: ModelConfig,
+                        ctx: MeshCtx) -> tuple[Array, Array]:
+    """x: [B, S_loc, D] -> (y, aux_loss).  All ranks hold an ff-shard of
+    every expert; dispatch happens on the sequence-gathered activations so
+    all ranks agree on token order, and the down-projection reduce-scatters
+    straight back to sequence shards (MDMP ring)."""
+    e_cfg = cfg.moe
+    b, s_loc, d = x.shape
+
+    # gather the sequence (all ranks see identical tokens)
+    x_full2 = managed.managed_all_gather(layers.to_ring(x), "model",
+                                         mode=ctx.mdmp_mode)  # [S*B, D]
+    t = x_full2.shape[0]
+    e = e_cfg.n_experts
+    cap = max(1, int(t * e_cfg.top_k / e * e_cfg.capacity_factor))
+
+    gates, top_idx, aux = _router(x_full2, params["w_router"], e,
+                                  e_cfg.top_k)
+    dest, tok, keep, order = dispatch_indices(top_idx, e, cap)
+    buffers = gather_to_buffers(x_full2, dest, tok, keep, e, cap)
+
+    w1 = fsdp_gather(params["w1"], "data", axis=1, mode=ctx.mdmp_mode)
+    w1g = (fsdp_gather(params["w1_gate"], "data", axis=1,
+                       mode=ctx.mdmp_mode)
+           if layers.gated(cfg.mlp) else None)
+    w2 = fsdp_gather(params["w2"], "data", axis=2, mode=ctx.mdmp_mode)
+    u = jnp.einsum("ecd,edf->ecf", buffers, w1)          # F_loc columns
+    if layers.gated(cfg.mlp):
+        g = jnp.einsum("ecd,edf->ecf", buffers, w1g)
+        act = layers.activation(cfg.mlp, u, g)
+    else:
+        act = layers.activation(cfg.mlp, u, None)
+    part = jnp.einsum("ecf,efd->ecd", act, w2)           # partial over F
+
+    # combine back to token-major, then one ring both sums the ff-partials
+    # and scatters the sequence (psum+scatter ring).
+    y_part = combine_from_buffers(part, dest, tok, keep, gates, order, t)
+    y2 = managed.managed_reduce_scatter(y_part, "model", mode=ctx.mdmp_mode)
+    return layers.from_ring(y2, b).astype(x.dtype), aux
+
+
+def moe_block(x: Array, params: dict, cfg: ModelConfig, ctx: MeshCtx
+              ) -> tuple[Array, Array]:
+    impl = cfg.moe.impl
+    if impl == "auto":
+        impl = "ep_a2a" if cfg.moe.n_experts % ctx.tp == 0 else "expert_tp"
+    if impl == "ep_a2a" and cfg.moe.n_experts % ctx.tp == 0:
+        return moe_block_ep(x, params, cfg, ctx)
+    return moe_block_expert_tp(x, params, cfg, ctx)
+
+
+# ---------------------------------------------------------------------------
+# Decode flow: single token, batch replicated
+# ---------------------------------------------------------------------------
+
+
+def moe_block_decode(x: Array, params: dict, cfg: ModelConfig,
+                     ctx: MeshCtx) -> Array:
+    """x: [B, D_loc(data)] -> [B, D_loc(data)].  Batch is replicated, so
+    every rank routes identically; expert weights stay stationary and only
+    activation-sized reductions cross the links.
+
+    ep_a2a layout: this rank holds [E_loc] whole experts — compute their
+    contributions (gate-masked) and psum over 'model'.
+    expert_tp layout: this rank holds an F-shard of every expert — dense
+    masked compute, psum over 'model' sums the ff partials.
+    Both contract the FSDP dim with psum('data')."""
+    e_cfg = cfg.moe
+    e = e_cfg.n_experts
+
+    x_full = managed.managed_all_gather(
+        x.T, "data", mode=ctx.mdmp_mode).T          # [B, D]
+    gates, top_idx, _ = _router(x_full, params["w_router"], e, e_cfg.top_k)
+    gate_full = _scatter_gates(gates, top_idx, e)              # [B, E]
+
+    impl = e_cfg.impl
+    if impl == "auto":
+        impl = "ep_a2a" if e % ctx.tp == 0 else "expert_tp"
+
+    u = jnp.einsum("bd,edf->ebf", x, params["w1"])
+    if layers.gated(cfg.mlp):
+        g = jnp.einsum("bd,edf->ebf", x, params["w1_gate"])
+        ug = managed.managed_all_reduce(
+            jnp.concatenate([u, g], axis=-1), "data", mode=ctx.mdmp_mode)
+        uu, g = jnp.split(ug, 2, axis=-1)
+        act = layers.activation(cfg.mlp, uu, g)
+    else:
+        u = managed.managed_all_reduce(u, "data", mode=ctx.mdmp_mode)
+        act = layers.activation(cfg.mlp, u, None)
+    part = jnp.einsum("ebf,efd->ebd", act, params["w2"])
+
+    if impl == "ep_a2a" and e % ctx.tp == 0:
+        e_loc = e // ctx.tp
+        eidx = lax.axis_index("model") * e_loc
+        g_use = lax.dynamic_slice_in_dim(gate_full, eidx, e_loc, axis=1)
+    else:
+        g_use = gate_full
+    y = jnp.einsum("ebd,be->bd", part, g_use.astype(part.dtype))
+    y = managed.managed_all_reduce(y, "model", mode=ctx.mdmp_mode)
+    return y.astype(x.dtype)
+
+
+def _scatter_gates(gates: Array, top_idx: Array, n_experts: int) -> Array:
+    """[T, K] gate weights + ids -> dense [T, E]."""
+    oh = jax.nn.one_hot(top_idx, n_experts, dtype=gates.dtype)   # [T,K,E]
+    return jnp.einsum("tk,tke->te", gates, oh)

@@ -1,0 +1,254 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in the explicit
+shard_map world.
+
+TP: SSD heads are sharded over the ``model`` axis (head count padded to a
+TP multiple, DESIGN.md §3.3).  The fused input projection is computed with
+the MDMP all-gather-matmul ring (sequence gathered while the projection
+matmul runs); the output projection returns to sequence shards via
+matmul-reduce-scatter.  The scan itself is chunk-parallel within a shard
+(the SSD dual form: quadratic-in-chunk attention-like blocks + an
+inter-chunk state recurrence) and communication-free — the paper's
+technique applies to the projections and gradient reduction only
+(DESIGN.md §3.3 arch-applicability).
+
+Decode: O(1) state update per token (conv ring buffer + SSM state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core import managed
+from repro.core.overlap import fsdp_gather
+from repro.models import layers
+from repro.parallel.sharding import MeshCtx
+
+Array = jax.Array
+
+
+def ssd_dims(cfg: ModelConfig, ctx: MeshCtx) -> dict:
+    s = cfg.ssm
+    h = cfg.ssm_heads
+    h_loc = h // ctx.tp
+    p = s.headdim
+    return dict(h=h, h_loc=h_loc, p=p, n=s.d_state, conv=s.d_conv,
+                chunk=s.chunk, d_inner_loc=h_loc * p)
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD scan (per shard-local heads, full sequence)
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan(x: Array, dt: Array, a: Array, b_mat: Array, c_mat: Array,
+             d_skip: Array, chunk: int,
+             h0: Array | None = None) -> tuple[Array, Array]:
+    """SSD chunked dual form.
+
+    x:     [B, S, H, P]     inputs per head
+    dt:    [B, S, H]        softplus-activated step sizes
+    a:     [H]              negative decay rates (A = -exp(a_log))
+    b_mat: [B, S, N]        input maps (shared across heads, n_groups=1)
+    c_mat: [B, S, N]        output maps
+    d_skip:[H]              skip connection
+    h0:    [B, H, P, N]     initial state (decode/chunked prefill)
+    Returns (y [B, S, H, P], final_state [B, H, P, N]).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    nc = max(1, s // chunk)
+    q = s // nc
+    f32 = jnp.float32
+
+    xc = x.reshape(bsz, nc, q, h, p).astype(f32)
+    dtc = dt.reshape(bsz, nc, q, h).astype(f32)
+    bc = b_mat.reshape(bsz, nc, q, n).astype(f32)
+    cc = c_mat.reshape(bsz, nc, q, n).astype(f32)
+
+    da = dtc * a[None, None, None, :]                   # [B,NC,Q,H] (<=0)
+    cum = jnp.cumsum(da, axis=2)                        # within-chunk cumsum
+    seg_end = cum[:, :, -1, :]                          # [B,NC,H]
+
+    # --- intra-chunk (attention-like, lower-triangular decay mask) --------
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,NC,Q,Q,H]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    lmask = jnp.where(tri[None, None, :, :, None], jnp.exp(li), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)          # [B,NC,Q,Q]
+    w = cb[..., None] * lmask * dtc[:, :, None, :, :]   # [B,NC,Q,Q,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc)
+
+    # --- chunk states ------------------------------------------------------
+    decay_to_end = jnp.exp(seg_end[:, :, None, :] - cum)      # [B,NC,Q,H]
+    sc = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                    bc, decay_to_end * dtc, xc)               # [B,NC,H,P,N]
+
+    # --- inter-chunk recurrence (sequential scan over chunks) --------------
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), f32)
+
+    def body(hprev, inputs):
+        s_c, g = inputs                                  # g: [B,H] decay
+        hnew = hprev * jnp.exp(g)[:, :, None, None] + s_c
+        return hnew, hprev
+
+    sc_t = jnp.moveaxis(sc, 1, 0)                        # [NC,B,H,P,N]
+    g_t = jnp.moveaxis(seg_end, 1, 0)                    # [NC,B,H]
+    h_final, h_before = lax.scan(body, h0.astype(f32), (sc_t, g_t))
+    h_before = jnp.moveaxis(h_before, 0, 1)              # [B,NC,H,P,N]
+
+    # --- inter-chunk contribution ------------------------------------------
+    yc_in = jnp.einsum("bcqn,bchpn->bcqhp", cc, h_before)
+    y_inter = yc_in * jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    y = y + x.astype(f32) * d_skip[None, None, :, None]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(xt: Array, dt: Array, a: Array, bt: Array, ct: Array,
+                    d_skip: Array, h_state: Array) -> tuple[Array, Array]:
+    """One-token SSD update.  xt: [B,H,P], dt: [B,H], bt/ct: [B,N],
+    h_state: [B,H,P,N] -> (y [B,H,P], new state)."""
+    f32 = jnp.float32
+    xt_, dt_, bt_, ct_ = (t.astype(f32) for t in (xt, dt, bt, ct))
+    da = jnp.exp(dt_ * a[None, :])                       # [B,H]
+    upd = jnp.einsum("bhp,bn->bhpn", xt_ * dt_[..., None], bt_)
+    hnew = h_state * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", hnew, ct_)
+    y = y + xt_ * d_skip[None, :, None]
+    return y.astype(xt.dtype), hnew
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv over sequence (pre-SSD, on x|B|C channels)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(u: Array, w: Array, state: Array | None = None
+                ) -> tuple[Array, Array]:
+    """u: [B, S, C]; w: [K, C] depthwise kernel.  Returns (out [B,S,C],
+    new conv state [B, K-1, C])."""
+    bsz, s, c = u.shape
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((bsz, k - 1, c), u.dtype)
+    up = jnp.concatenate([state, u], axis=1)            # [B, S+K-1, C]
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(k):
+        out = out + up[:, i:i + s].astype(jnp.float32) * \
+            w[i][None, None].astype(jnp.float32)
+    new_state = up[:, s:]
+    return jax.nn.silu(out).astype(u.dtype), new_state
+
+
+def conv_step(ut: Array, w: Array, state: Array) -> tuple[Array, Array]:
+    """One-token depthwise conv.  ut: [B, C]; state: [B, K-1, C]."""
+    k = w.shape[0]
+    window = jnp.concatenate([state, ut[:, None]], axis=1)  # [B, K, C]
+    out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return jax.nn.silu(out).astype(ut.dtype), window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 mixer (SP flow and decode flow)
+# ---------------------------------------------------------------------------
+
+
+def mamba_mixer_sp(x: Array, params: dict, cfg: ModelConfig, ctx: MeshCtx,
+                   *, return_state: bool = False):
+    """x: [B, S_loc, D] -> [B, S_loc, D].  Heads sharded over 'model';
+    the in-projection ring gathers the sequence (MDMP)."""
+    b = x.shape[0]
+    dims = ssd_dims(cfg, ctx)
+    h_loc, p, n = dims["h_loc"], dims["p"], dims["n"]
+
+    # w_z/w_x: [D, di] heads sharded over model; w_bc: [D, 2N] replicated
+    # over model; w_dt: [D, H] heads sharded.  ONE MDMP ring for all four.
+    w_z = fsdp_gather(params["w_z"], "data", mode=ctx.mdmp_mode)
+    w_x = fsdp_gather(params["w_x"], "data", mode=ctx.mdmp_mode)
+    w_bc = fsdp_gather(params["w_bc"], "data", mode=ctx.mdmp_mode)
+    w_dt = fsdp_gather(params["w_dt"], "data", mode=ctx.mdmp_mode)
+    w_out = fsdp_gather(params["w_out"], "data", axis=1, mode=ctx.mdmp_mode)
+
+    x2 = layers.to_ring(x)
+    z2, xs2, bc2, dt2 = managed.all_gather_matmul_multi(
+        x2, [w_z, w_x, w_bc, w_dt], "model", mode=ctx.mdmp_mode)
+    z = layers.from_ring(z2, b)                          # [B, S, di]
+    xs = layers.from_ring(xs2, b)                        # [B, S, di]
+    bc = layers.from_ring(bc2, b)                        # [B, S, 2N]
+    dt = layers.from_ring(dt2, b)                        # [B, S, H_loc]
+    s_full = z.shape[1]
+    di = h_loc * p
+
+    conv_w = jnp.concatenate([params["conv_x"], params["conv_bc"]],
+                             axis=-1)
+    xbc = jnp.concatenate([xs, bc], axis=-1)
+    xbc, conv_tail = causal_conv(xbc, conv_w)
+    xs, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))    # [H_loc]
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32)
+                             + params["dt_bias"][None, None])
+    y, h_final = ssd_scan(xs.reshape(b, s_full, h_loc, p), dt_act, a,
+                          bmat, cmat, params["d_skip"], dims["chunk"])
+    y = y.reshape(b, s_full, di)
+    # gated norm over the FULL d_inner (heads are sharded over 'model' —
+    # only the scalar sum-of-squares crosses the axis)
+    y = layers.rms_norm_sharded(
+        y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+        params["norm_w"], cfg.norm_eps, "model")
+
+    y2 = managed.matmul_reduce_scatter(layers.to_ring(y), w_out, "model",
+                                       mode=ctx.mdmp_mode)
+    out = layers.from_ring(y2.astype(x.dtype), b)
+    if return_state:
+        # decode continues from the final SSM state + pre-conv tail
+        return out, (h_final, conv_tail)
+    return out
+
+
+def mamba_mixer_decode(x: Array, state: tuple, params: dict,
+                       cfg: ModelConfig, ctx: MeshCtx):
+    """One-token mixer.  x: [B, D_loc(data)] (decode flow);
+    state = (h_state [B,H_loc,P,N], conv_state [B,K-1,C]).
+    Weight-stationary: in-projection contracts the FSDP dim with
+    psum('data'); out-projection psum('model')."""
+    dims = ssd_dims(cfg, ctx)
+    h_loc, p, n = dims["h_loc"], dims["p"], dims["n"]
+    di = h_loc * p
+    h_state, conv_state = state
+
+    zxbcdt = managed.managed_all_reduce(
+        jnp.concatenate([jnp.dot(x, params["w_z"]),
+                         jnp.dot(x, params["w_x"]),
+                         jnp.dot(x, params["w_bc"]),
+                         jnp.dot(x, params["w_dt"])], axis=-1),
+        "data", mode=ctx.mdmp_mode)
+    z, xs, bmat, cmat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+
+    conv_w = jnp.concatenate([params["conv_x"], params["conv_bc"]],
+                             axis=-1)
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    xbc, conv_state = conv_step(xbc, conv_w, conv_state)
+    xs, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32)
+                             + params["dt_bias"][None])
+    bsz = x.shape[0]
+    y, h_state = ssd_decode_step(
+        xs.reshape(bsz, h_loc, p), dt_act, a, bmat, cmat,
+        params["d_skip"], h_state)
+    y = y.reshape(bsz, di)
+    y = layers.rms_norm_sharded(
+        y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+        params["norm_w"], cfg.norm_eps, "model")
+    out = managed.managed_all_reduce(
+        jnp.dot(y, params["w_out"]), "model", mode=ctx.mdmp_mode)
+    return out.astype(x.dtype), (h_state, conv_state)

@@ -1,0 +1,310 @@
+"""Block assembly + scan-over-layers for every assigned family.
+
+SP flow blocks take/return [B, S_loc, D]; decode blocks [B, D_loc(data)].
+Layers are stacked on a leading ``layers`` dim and run under ``lax.scan``
+(keeps HLO size independent of depth — essential for 96-layer dry-runs),
+with ``jax.checkpoint`` around the block body for training remat.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core import managed
+from repro.models import attention, layers, moe, ssm
+from repro.parallel.sharding import MeshCtx
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# SP-flow blocks (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def block_sp(x: Array, p: dict, cfg: ModelConfig, ctx: MeshCtx, *,
+             causal: bool, window, collect_kv: bool):
+    """One decoder block.  ``window`` may be a traced scalar (hybrid archs
+    scan over per-layer window sizes).  Returns (x, aux_loss, kv|None,
+    ssm_state|None)."""
+    aux = jnp.float32(0.0)
+    kv = None
+    sstate = None
+
+    if cfg.family == "ssm":
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        if collect_kv:
+            y, sstate = ssm.mamba_mixer_sp(h, p, cfg, ctx, return_state=True)
+        else:
+            y = ssm.mamba_mixer_sp(h, p, cfg, ctx)
+        return x + y, aux, kv, sstate
+
+    attn_fn = (attention.attention_sp_ulysses
+               if cfg.attn_impl == "ulysses" else attention.attention_sp)
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.family == "hybrid":
+        att = attn_fn(h, p, cfg, ctx, causal=causal,
+                      window=window, return_kv=collect_kv)
+        if collect_kv:
+            att, kv = att
+            y_ssm, sstate = ssm.mamba_mixer_sp(h, p["ssm"], cfg, ctx,
+                                               return_state=True)
+        else:
+            y_ssm = ssm.mamba_mixer_sp(h, p["ssm"], cfg, ctx)
+        x = x + 0.5 * (att + y_ssm)
+    else:
+        att = attn_fn(h, p, cfg, ctx, causal=causal,
+                      window=window, return_kv=collect_kv)
+        if collect_kv:
+            att, kv = att
+        x = x + att
+
+    h2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = moe.moe_block(h2, p, cfg, ctx)
+    else:
+        y = layers.mlp_block_sp(h2, p, cfg, ctx)
+    return x + y, aux, kv, sstate
+
+
+def cross_block_sp(x: Array, p: dict, enc_out: Array, cfg: ModelConfig,
+                   ctx: MeshCtx) -> Array:
+    """Whisper decoder cross-attention sub-block.  enc_out: [B, F_loc, D]
+    (frame-sharded over 'model')."""
+    b = x.shape[0]
+    h = layers.rms_norm(x, p["ln_x"], cfg.norm_eps)
+    tp = ctx.tp
+    h_loc = cfg.padded_heads // tp
+    kvh = attention.padded_kv_heads(cfg)
+    hd = cfg.head_dim
+
+    from repro.core.overlap import fsdp_gather
+    wq = fsdp_gather(p["w_q_x"], "data", mode=ctx.mdmp_mode)
+    wkv = fsdp_gather(p["w_kv_x"], "data", mode=ctx.mdmp_mode)
+    wo = fsdp_gather(p["w_o_x"], "data", axis=1, mode=ctx.mdmp_mode)
+
+    q2 = managed.all_gather_matmul(layers.to_ring(h), wq, "model",
+                                   mode=ctx.mdmp_mode)
+    kv2 = managed.all_gather_matmul(layers.to_ring(enc_out), wkv, "model",
+                                    mode=ctx.mdmp_mode)
+    s_full = q2.shape[0] // b
+    f_full = kv2.shape[0] // b
+    q = layers.from_ring(q2, b).reshape(b, s_full, h_loc, hd)
+    k, v = jnp.split(layers.from_ring(kv2, b), 2, axis=-1)
+    k = k.reshape(b, f_full, kvh, hd)
+    v = v.reshape(b, f_full, kvh, hd)
+    k, v, _ = attention._local_kv_slice(k, v, cfg, ctx)
+    o = attention.attend(q, k, v, causal=False)
+    y2 = managed.matmul_reduce_scatter(
+        layers.to_ring(o.reshape(b, s_full, h_loc * hd)), wo, "model",
+        mode=ctx.mdmp_mode)
+    return x + layers.from_ring(y2.astype(x.dtype), b)
+
+
+def stack_sp(x: Array, stacked: dict, cfg: ModelConfig, ctx: MeshCtx, *,
+             causal: bool = True, collect_kv: bool = False,
+             enc_out: Array | None = None, remat: bool | None = None):
+    """Run the block over layers.  ``stacked`` is a leaf-stacked pytree
+    (scanned) or a per-layer list (unrolled — hybrid archs, whose per-layer
+    cache shapes and static windows preclude a uniform scan).
+    Returns (x, aux_sum, kv_stack|None, ssm_states|None)."""
+    remat = cfg.remat if remat is None else remat
+    if isinstance(stacked, (list, tuple)):
+        return _stack_sp_unrolled(x, stacked, cfg, ctx, causal=causal,
+                                  collect_kv=collect_kv, enc_out=enc_out,
+                                  remat=remat)
+    window = cfg.sliding_window   # uniform across scanned layers
+
+    def body(carry, p):
+        xc = carry
+        if enc_out is not None:
+            # whisper decoder: self-attn block + cross-attn sub-block
+            xc, aux, kv, st = block_sp(xc, p, cfg, ctx, causal=causal,
+                                       window=window, collect_kv=collect_kv)
+            xc = cross_block_sp(xc, p, enc_out, cfg, ctx)
+        else:
+            xc, aux, kv, st = block_sp(xc, p, cfg, ctx, causal=causal,
+                                       window=window, collect_kv=collect_kv)
+        outs = (aux, kv, st)
+        return xc, outs
+
+    fn = jax.checkpoint(body, prevent_cse=False) if remat else body
+    x, (auxs, kvs, states) = lax.scan(fn, x, stacked)
+    aux = jnp.sum(auxs)
+    return x, aux, kvs, states
+
+
+def _stack_sp_unrolled(x: Array, per_layer: list, cfg: ModelConfig,
+                       ctx: MeshCtx, *, causal: bool, collect_kv: bool,
+                       enc_out: Array | None, remat: bool):
+    aux = jnp.float32(0.0)
+    kvs, states = [], []
+    for i, p in enumerate(per_layer):
+        window = layer_window(cfg, i)
+
+        def run(xc, p, window=window):
+            out = block_sp(xc, p, cfg, ctx, causal=causal, window=window,
+                           collect_kv=collect_kv)
+            if enc_out is not None:
+                xc2, a, kv, st = out
+                xc2 = cross_block_sp(xc2, p, enc_out, cfg, ctx)
+                return xc2, a, kv, st
+            return out
+
+        # prevent_cse=True is LOAD-BEARING here: in an unrolled python
+        # loop XLA CSE merges the bwd recompute back into the fwd,
+        # silently reinstating every saved activation (measured: 313 GiB
+        # -> remat'd on the hymba train cell).  Scan bodies (stack_sp
+        # scanned path) are CSE-immune, so they keep prevent_cse=False.
+        fn = jax.checkpoint(run, prevent_cse=True) if remat else run
+        x, a, kv, st = fn(x, p)
+        aux = aux + a
+        kvs.append(kv)
+        states.append(st)
+    kv_out = kvs if collect_kv else None
+    st_out = states if collect_kv else None
+    return x, aux, kv_out, st_out
+
+
+def layer_window(cfg: ModelConfig, i: int) -> int:
+    """Static per-layer window (0 = full attention)."""
+    if cfg.sliding_window and cfg.family == "hybrid":
+        return 0 if i in cfg.full_attn_layers else cfg.sliding_window
+    return cfg.sliding_window
+
+
+# ---------------------------------------------------------------------------
+# Decode-flow blocks
+# ---------------------------------------------------------------------------
+
+
+def _ln_loc(scale: Array, ctx: MeshCtx) -> Array:
+    """Replicated [D] norm scale -> this data-rank's [D_loc] slice
+    (decode-flow residual is D-sharded over 'data')."""
+    d_loc = scale.shape[0] // ctx.dp
+    return lax.dynamic_slice_in_dim(scale, lax.axis_index("data") * d_loc,
+                                    d_loc, axis=0)
+
+
+def _ssm_decode(x, p, state, cfg, ctx):
+    cs = jnp.concatenate([state["ssm_conv_x"], state["ssm_conv_bc"]],
+                         axis=-1)
+    y, (hs, cs2) = ssm.mamba_mixer_decode(x, (state["ssm_h"], cs), p, cfg,
+                                          ctx)
+    di = state["ssm_conv_x"].shape[-1]
+    return y, hs, cs2[..., :di], cs2[..., di:]
+
+
+def block_decode(x: Array, p: dict, state: dict, pos: Array,
+                 cfg: ModelConfig, ctx: MeshCtx, *, window) -> tuple:
+    """One-token decode block.  state: per-layer slice of the decode cache
+    pytree.  Returns (x, new_state)."""
+    new_state = dict(state)
+
+    if cfg.family == "ssm":
+        h = layers.rms_norm_sharded(x, _ln_loc(p["ln1"], ctx), cfg.norm_eps,
+                                    "data")
+        y, hs, cx, cbc = _ssm_decode(h, p, state, cfg, ctx)
+        new_state["ssm_h"] = hs
+        new_state["ssm_conv_x"], new_state["ssm_conv_bc"] = cx, cbc
+        return x + y, new_state
+
+    h = layers.rms_norm_sharded(x, _ln_loc(p["ln1"], ctx), cfg.norm_eps,
+                                "data")
+    att, (k_c, v_c) = attention.attention_decode(
+        h, (state["k"], state["v"]), pos, p, cfg, ctx, window=window)
+    new_state["k"], new_state["v"] = k_c, v_c
+    if cfg.family == "hybrid":
+        y_ssm, hs, cx, cbc = _ssm_decode(h, p["ssm"], state, cfg, ctx)
+        new_state["ssm_h"] = hs
+        new_state["ssm_conv_x"], new_state["ssm_conv_bc"] = cx, cbc
+        x = x + 0.5 * (att + y_ssm)
+    else:
+        x = x + att
+
+    if cfg.encoder is not None:
+        x = cross_block_decode(x, p, (state["xk"], state["xv"]), cfg, ctx)
+
+    h2 = layers.rms_norm_sharded(x, _ln_loc(p["ln2"], ctx), cfg.norm_eps,
+                                 "data")
+    if cfg.family == "moe":
+        y = moe.moe_block_decode(h2, p, cfg, ctx)
+    else:
+        y = layers.mlp_block_decode(h2, p, cfg, ctx)
+    return x + y, new_state
+
+
+def cross_block_decode(x: Array, p: dict, enc_kv: tuple, cfg: ModelConfig,
+                       ctx: MeshCtx) -> Array:
+    """Whisper decode cross-attention against the precomputed encoder KV
+    (frame-sharded over the cache axes; LSE merge, no cache write)."""
+    import math
+    b = x.shape[0]
+    tp = ctx.tp
+    h_ = cfg.padded_heads
+    h_loc = h_ // tp
+    kvh = attention.padded_kv_heads(cfg)
+    hd = cfg.head_dim
+    k_enc, v_enc = enc_kv
+
+    hx = layers.rms_norm_sharded(x, _ln_loc(p["ln_x"], ctx), cfg.norm_eps,
+                                 "data")
+    q = managed.managed_all_reduce(jnp.dot(hx, p["w_q_x"]), "data",
+                                   mode=ctx.mdmp_mode)
+    q = q.reshape(b, h_loc, hd)
+    q_all = managed.managed_all_gather(q.transpose(1, 0, 2), "model",
+                                       mode=ctx.mdmp_mode).transpose(1, 0, 2)
+    groups = h_ // kvh
+    qg = q_all.reshape(b, kvh, groups, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k_enc,
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    m_loc = jnp.max(logits, axis=-1)
+    m_glob = lax.pmax(m_loc, attention.cache_axes(ctx))
+    pr = jnp.exp(logits - m_glob[..., None])
+    l_loc = jnp.sum(pr, axis=-1)
+    o_loc = jnp.einsum("bkgs,bskd->bkgd", pr.astype(v_enc.dtype), v_enc,
+                       preferred_element_type=jnp.float32)
+    l_g, o_g = l_loc, o_loc
+    for ax in attention.cache_axes(ctx):
+        l_g = managed.managed_all_reduce(l_g, ax)
+        o_g = managed.managed_all_reduce(o_g, ax)
+    o = (o_g / jnp.maximum(l_g[..., None], 1e-30)).reshape(b, h_, hd)
+    r_m = lax.axis_index("model")
+    o_my = lax.dynamic_slice_in_dim(o.astype(x.dtype), r_m * h_loc, h_loc,
+                                    axis=1)
+    y = managed.managed_all_reduce(
+        jnp.dot(o_my.reshape(b, h_loc * hd), p["w_o_x"]), "model",
+        mode=ctx.mdmp_mode)
+    return x + y.astype(x.dtype)
+
+
+def stack_decode(x: Array, stacked: dict, cache, pos: Array,
+                 cfg: ModelConfig, ctx: MeshCtx) -> tuple[Array, Any]:
+    """Decode blocks over layers.  Scanned (cache leaves [L, ...]) or
+    unrolled (per-layer cache list — hybrid archs whose SWA/global cache
+    shapes differ)."""
+    if isinstance(stacked, (list, tuple)):
+        new_cache = []
+        for i, (p, state) in enumerate(zip(stacked, cache)):
+            x, st = block_decode(x, p, state, pos, cfg, ctx,
+                                 window=layer_window(cfg, i))
+            new_cache.append(st)
+        return x, new_cache
+
+    window = cfg.sliding_window   # uniform across scanned layers
+
+    def body(carry, xs):
+        xc = carry
+        p, state = xs
+        xc, new_state = block_decode(xc, p, state, pos, cfg, ctx,
+                                     window=window)
+        return xc, new_state
+
+    x, new_cache = lax.scan(body, x, (stacked, cache))
+    return x, new_cache

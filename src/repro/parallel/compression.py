@@ -1,0 +1,52 @@
+"""Gradient compression for the thin cross-pod links: int8 quantisation
+with error feedback.
+
+``compressed_psum(g, axis, err)``: quantise (g + err) to int8 with a
+per-tensor scale, exchange the int8 payload + scales with an all-gather
+(summing happens after dequantisation, so no int8 overflow), and keep the
+local quantisation residual as the next step's error feedback.  Bytes on
+the wire: n * (size/4 + 4) vs n * size for an fp32 ring — ~4x less.  Error
+feedback makes the bias vanish over steps (tested: compressed training
+tracks uncompressed loss).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import managed
+
+Array = jax.Array
+
+
+def quantize_int8(x: Array) -> tuple[Array, Array]:
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(g: Array, axis_name: str, err: Array | None
+                    ) -> tuple[Array, Array]:
+    """Error-feedback int8 psum across ``axis_name``.
+    Returns (summed grad (f32-accurate up to quantisation), new error)."""
+    g32 = g.astype(jnp.float32)
+    if err is not None and err.shape == g.shape:
+        g32 = g32 + err.astype(jnp.float32)
+    q, scale = quantize_int8(g32)
+    new_err = (g32 - dequantize_int8(q, scale)).astype(g.dtype)
+
+    n = lax.psum(1, axis_name)
+    # exchange int8 payloads; dequantise with each sender's scale, then sum
+    q_all = managed.managed_all_gather(q[None], axis_name)      # [n, ...]
+    s_all = managed.managed_all_gather(scale[None], axis_name)  # [n]
+    deq = q_all.astype(jnp.float32) * s_all.reshape(
+        (n,) + (1,) * (q.ndim))
+    total = jnp.sum(deq, axis=0)
+    return total.astype(g.dtype), new_err

@@ -1,0 +1,85 @@
+"""Pipeline parallelism over the ``pod`` axis.
+
+The multi-pod mesh's default posture is hierarchical DP across pods; this
+module provides the alternative: the pod axis as pipeline STAGES.  Layers
+split into ``n_pods`` contiguous stages; microbatches stream through a
+GPipe schedule whose stage handoff is a single managed collective-permute
+(the MDMP "message") per tick — compute on microbatch i overlaps the
+permute of microbatch i-1 exactly like the paper's intermingled sends.
+
+Used by launch/dryrun.py's --pipeline demo cell and the dist test; the
+schedule works for any stage_fn (the dense block stack here).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+
+def pipeline_apply(stage_fn: Callable[[Array, Any], Array],
+                   stage_params: Any, x_microbatches: Array,
+                   axis_name: str = "pod") -> Array:
+    """GPipe over the ``axis_name`` stages.
+
+    stage_fn(x, params) -> x    this rank's layer sub-stack
+    stage_params                this rank's stage parameters (local)
+    x_microbatches: [M, B, ...] microbatches (equal on every stage; only
+                                stage 0's input content matters)
+    Returns [M, B, ...] outputs (valid on the LAST stage; other stages
+    return in-flight garbage — callers psum-select, see pipeline_lm_loss).
+
+    Schedule: T = M + S - 1 ticks; at tick t stage s processes microbatch
+    t - s.  The inter-stage handoff is one collective_permute per tick.
+    """
+    n_stage = lax.psum(1, axis_name)
+    sid = lax.axis_index(axis_name)
+    m = x_microbatches.shape[0]
+    ticks = m + n_stage - 1
+    perm = [(i, i + 1) for i in range(n_stage - 1)]
+
+    def tick(carry, t):
+        inflight, outputs = carry
+        # stage 0 injects microbatch t; others take the handoff
+        mb_idx = jnp.clip(t - sid, 0, m - 1)
+        inject = x_microbatches[jnp.clip(t, 0, m - 1)]
+        x_in = jnp.where(sid == 0, inject, inflight)
+        active = (t - sid >= 0) & (t - sid < m)
+        y = stage_fn(x_in, stage_params)
+        y = jnp.where(active, y, inflight)
+        # last stage records its finished microbatch
+        outputs = lax.cond(
+            active & (sid == n_stage - 1),
+            lambda o: lax.dynamic_update_slice_in_dim(
+                o, y[None], mb_idx, axis=0),
+            lambda o: o, outputs)
+        # hand off to the next stage (MDMP message)
+        handoff = lax.ppermute(y, axis_name, perm)
+        return (handoff, outputs), None
+
+    inflight0 = jnp.zeros_like(x_microbatches[0])
+    outputs0 = jnp.zeros_like(x_microbatches)
+    (_, outputs), _ = lax.scan(tick, (inflight0, outputs0),
+                               jnp.arange(ticks))
+    return outputs
+
+
+def select_last_stage(x: Array, axis_name: str = "pod") -> Array:
+    """Broadcast the last stage's value to every stage (masked psum)."""
+    n_stage = lax.psum(1, axis_name)
+    sid = lax.axis_index(axis_name)
+    mask = (sid == n_stage - 1).astype(x.dtype)
+    return lax.psum(x * mask, axis_name)
+
+
+def stage_layer_slice(n_layers: int, axis_name: str = "pod"
+                      ) -> tuple[Array, int]:
+    """(first layer index of this stage, layers per stage)."""
+    n_stage = lax.psum(1, axis_name)
+    per = n_layers // n_stage
+    return lax.axis_index(axis_name) * per, per

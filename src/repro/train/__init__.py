@@ -1,0 +1,3 @@
+from repro.train.train_loop import TrainLoop, TrainLoopConfig, build_train_step
+
+__all__ = ["TrainLoop", "TrainLoopConfig", "build_train_step"]

@@ -1,0 +1,153 @@
+"""Serving: prefill + decode step builders and a batched generation loop.
+
+Prefill runs the SP flow (sequence-sharded); decode runs the TP-2D flow
+with the KV cache sequence-sharded over (data x model) [x pod].  The two
+use the SAME parameter layout — no weight resharding between phases
+(DESIGN.md §3.1); only the cache is resharded once per sequence
+(prefill layout [B(data), S(model)] -> decode layout [B replicated,
+S(data x model)]), the standard prefill/decode disaggregation transfer.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import attention
+from repro.models.model import Model
+from repro.parallel.sharding import MeshCtx, smap, spec_pspecs
+
+Array = jax.Array
+
+
+def build_decode_step(model: Model, mesh: Mesh, shape: ShapeConfig
+                      ) -> tuple[Callable, Any, Any]:
+    """Returns (jitted step, cache ShapeDtypeStructs, cache NamedShardings).
+
+    step(params, cache, token [B], pos []) -> (next_token [B], new cache)
+    """
+    ctx = model.ctx
+    pspecs = spec_pspecs(model.param_specs())
+    cache_sds, cache_pspecs = model.decode_cache_specs(shape)
+
+    def body(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    sharded = smap(body, mesh,
+                   in_specs=(pspecs, cache_pspecs, P(), P()),
+                   out_specs=(P(), cache_pspecs))
+    jitted = jax.jit(sharded, donate_argnums=(1,))
+    cache_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                   cache_pspecs)
+    return jitted, cache_sds, cache_shardings
+
+
+def build_prefill_step(model: Model, mesh: Mesh) -> Callable:
+    """step(params, batch) -> (last-token logits [B, V_loc], prefill cache)."""
+    ctx = model.ctx
+    cfg = model.cfg
+    pspecs = spec_pspecs(model.param_specs())
+    batch_axes = ctx.batch_axes
+    batch_pspec = {"tokens": P(batch_axes, None)}
+    if cfg.encoder is not None:
+        batch_pspec["frames"] = P(batch_axes, None, None)
+    if cfg.vision is not None:
+        batch_pspec["patches"] = P(batch_axes, None, None)
+
+    def body(params, batch):
+        return model.prefill_sp(params, batch)
+
+    # prefill cache layout: kv stacks [L?][B_loc, S_loc, KV, hd]
+    kv_spec = P(batch_axes, "model", None, None)
+    if model.scan_layers:
+        kv_tree = P(None, *kv_spec) if cfg.n_layers else None
+    else:
+        kv_tree = [kv_spec for _ in range(cfg.n_layers)]
+
+    def out_specs():
+        cache_spec = {
+            "kv": _kv_out_spec(model, kv_spec),
+            "ssm": _ssm_out_spec(model),
+            "enc_out": (P(batch_axes, "model", None)
+                        if cfg.encoder is not None else P()),
+        }
+        return (P(batch_axes, "model"), cache_spec)
+
+    sharded = smap(body, mesh, in_specs=(pspecs, batch_pspec),
+                   out_specs=out_specs())
+    return jax.jit(sharded)
+
+
+def _kv_out_spec(model: Model, kv_spec: P):
+    cfg = model.cfg
+    if cfg.family == "ssm" or not cfg.n_heads:
+        return None
+    pair = (kv_spec, kv_spec)
+    if model.scan_layers:
+        stacked = P(None, *kv_spec)
+        return (stacked, stacked)
+    return [pair for _ in range(cfg.n_layers)]
+
+
+def _ssm_out_spec(model: Model):
+    cfg = model.cfg
+    ctx = model.ctx
+    if cfg.family not in ("ssm", "hybrid"):
+        return None
+    ba = ctx.batch_axes
+    h_spec = P(ba, "model", None, None)          # [B, H_loc, P, N]
+    conv_spec = P(ba, None, None)                # [B, K-1, C_loc(mixed)]
+    pair = (h_spec, conv_spec)
+    if model.scan_layers:
+        return (P(None, *h_spec), P(None, *conv_spec))
+    return [pair for _ in range(cfg.n_layers)]
+
+
+# ---------------------------------------------------------------------------
+# Generation driver (CPU-scale; powers the serving example + tests)
+# ---------------------------------------------------------------------------
+
+
+class Generator:
+    def __init__(self, model: Model, mesh: Mesh, shape: ShapeConfig,
+                 params: Any):
+        self.model = model
+        self.mesh = mesh
+        self.shape = shape
+        self.params = params
+        self.decode_fn, self.cache_sds, self.cache_shardings = \
+            build_decode_step(model, mesh, shape)
+
+    def empty_cache(self) -> Any:
+        return jax.tree.map(
+            lambda sds, sh: jax.device_put(
+                jnp.zeros(sds.shape, sds.dtype), sh),
+            self.cache_sds, self.cache_shardings)
+
+    def generate(self, prompt_tokens: np.ndarray, n_new: int,
+                 start_pos: int = 0) -> np.ndarray:
+        """Greedy generation: feeds the prompt token-by-token through the
+        decode path (prompt prefill via decode — exercises cache writes),
+        then samples ``n_new`` tokens."""
+        cache = self.empty_cache()
+        b = prompt_tokens.shape[0]
+        out = []
+        tok = jnp.asarray(prompt_tokens[:, 0].astype(np.int32))
+        pos = start_pos
+        for i in range(prompt_tokens.shape[1] + n_new - 1):
+            nxt, cache = self.decode_fn(self.params, cache, tok,
+                                        jnp.int32(pos))
+            pos += 1
+            if i + 1 < prompt_tokens.shape[1]:
+                tok = jnp.asarray(prompt_tokens[:, i + 1].astype(np.int32))
+            else:
+                tok = nxt
+                out.append(np.asarray(nxt))
+        return np.stack(out, axis=1) if out else np.zeros((b, 0), np.int32)

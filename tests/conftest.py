@@ -1,0 +1,10 @@
+"""Top-level test config: the dist_suite needs 8 forced host devices set
+BEFORE jax initialises, so it only runs via tests/test_distributed.py's
+subprocess (which sets XLA_FLAGS).  Exclude it from in-process collection
+unless the devices are already there."""
+
+import jax
+
+collect_ignore_glob = []
+if jax.device_count() < 8:
+    collect_ignore_glob.append("dist_suite*")

@@ -1,0 +1,33 @@
+"""Distributed test suite — MUST run with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 set before jax imports.
+tests/test_distributed.py launches this directory in a subprocess with the
+right environment; running it directly inside the main pytest process would
+see 1 device and fail loudly here instead of confusingly later.
+"""
+
+import os
+
+import jax
+import pytest
+
+
+def pytest_configure(config):
+    if jax.device_count() < 8:
+        pytest.exit("dist_suite requires 8 devices; run via "
+                    "tests/test_distributed.py (subprocess sets XLA_FLAGS)",
+                    returncode=3)
+
+
+@pytest.fixture(scope="session")
+def mesh22():
+    return jax.make_mesh((2, 2), ("data", "model"))
+
+
+@pytest.fixture(scope="session")
+def mesh222():
+    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    return jax.make_mesh((8,), ("x",))

@@ -1,0 +1,27 @@
+"""Launcher for the distributed suite: spawns pytest on tests/dist_suite
+in a subprocess with 8 forced host devices (the env var must be set before
+jax initialises, which is impossible in-process once any test imported
+jax)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(3000)
+def test_distributed_suite():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest",
+         os.path.join(os.path.dirname(__file__), "dist_suite"),
+         "-x", "-q", "--no-header", "-p", "no:cacheprovider"],
+        env=env, capture_output=True, text=True, timeout=2900)
+    sys.stdout.write(proc.stdout[-8000:])
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "distributed suite failed"

@@ -1,0 +1,172 @@
+"""Substrate unit tests: data pipeline determinism/resume, checkpoint
+atomicity + elastic restore, instrumentation, tuner, HLO analyzer."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import ckpt
+from repro.core import instrument, tuner
+from repro.data.pipeline import DataConfig, SyntheticLMData
+from repro.launch import hlo
+
+
+# -- data pipeline -----------------------------------------------------------
+
+
+def test_data_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=8, seed=7)
+    d1 = SyntheticLMData(cfg)
+    d2, step = SyntheticLMData.resume(cfg, d1.state_dict(5))
+    assert step == 5
+    b1 = d1.global_batch_at(5)
+    b2 = d2.global_batch_at(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_data_shards_partition_global_batch():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=8)
+    d = SyntheticLMData(cfg)
+    g = d.global_batch_at(3)["tokens"]
+    parts = [d.shard_at(3, i, 4)["tokens"] for i in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), g)
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=25, deadline=None)
+def test_data_labels_are_shifted_tokens(step):
+    cfg = DataConfig(vocab_size=64, seq_len=24, global_batch=2)
+    b = SyntheticLMData(cfg).global_batch_at(step)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# -- checkpointing -----------------------------------------------------------
+
+
+def test_ckpt_roundtrip_and_latest(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+    ckpt.save(str(tmp_path), 3, tree, extra={"step": 3})
+    ckpt.save(str(tmp_path), 7, tree, extra={"step": 7})
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    out, extra = ckpt.restore(str(tmp_path), 7, tree)
+    assert extra["step"] == 7
+    np.testing.assert_array_equal(out["a"], np.arange(6).reshape(2, 3))
+
+
+def test_ckpt_atomic_no_tmp_left(tmp_path):
+    tree = {"x": jnp.zeros(10)}
+    path = ckpt.save(str(tmp_path), 1, tree)
+    assert not any(p.endswith(".tmp") for p in os.listdir(tmp_path))
+    assert os.path.exists(os.path.join(path, "manifest.json"))
+
+
+def test_ckpt_manager_async_and_gc(tmp_path):
+    mgr = ckpt.CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, {"x": jnp.full(4, s)})
+    mgr.wait()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [3, 4]
+
+
+def test_ckpt_shape_mismatch_rejected(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"x": jnp.zeros((2, 2))})
+    with pytest.raises(AssertionError):
+        ckpt.restore(str(tmp_path), 1, {"x": jnp.zeros((3, 3))})
+
+
+# -- instrumentation ---------------------------------------------------------
+
+
+def test_instrument_counts_reads():
+    def region(u, f):
+        v = u * 2.0
+        w = v + f
+        return w @ w.T
+
+    rep = instrument.analyze_region(region, jnp.ones((4, 4)),
+                                    jnp.ones((4, 4)),
+                                    tracked_args=[0, 1], labels=["u", "f"])
+    assert rep.records["u"].reads == 1
+    assert rep.records["u"].first_read_depth == 1
+    assert rep.records["f"].first_read_depth == 2
+    assert 0.0 < rep.overlap_budget("u") <= 1.0
+
+
+def test_instrument_budget_orders_consumers():
+    """An operand read late in the region has more overlap budget than one
+    read immediately (the recv-side schedule signal)."""
+    def region(a, b):
+        x = a + 1.0          # a read at depth 1
+        for _ in range(5):
+            x = x * 2.0
+        return x + b         # b read last
+
+    rep = instrument.analyze_region(region, jnp.ones(3), jnp.ones(3),
+                                    tracked_args=[0, 1], labels=["a", "b"])
+    assert rep.overlap_budget("b") > rep.overlap_budget("a")
+
+
+# -- tuner -------------------------------------------------------------------
+
+
+def test_tuner_measures_and_adapts(tmp_path):
+    t = tuner.ScheduleTuner(path=str(tmp_path / "t.json"))
+    e = t.decide("all_gather", (1024,), "float32", "model", 16,
+                 nbytes=4096, compute_time_s=0.0)
+    key = e.key
+    t.record(key, "bulk", 1, 1e-3)
+    t.record(key, "interleaved", 2, 5e-4)   # measured faster
+    assert t.entries[key].mode == "interleaved"
+    assert t.entries[key].chunks == 2
+    t.save()
+    t2 = tuner.ScheduleTuner(path=str(tmp_path / "t.json"))
+    assert t2.entries[key].mode == "interleaved"
+
+
+def test_tuner_trial_sweep():
+    t = tuner.ScheduleTuner()
+    e = t.decide("all_reduce", (64,), "float32", "data", 4, nbytes=256)
+    seen = set()
+    while True:
+        trial = t.next_trial(e.key)
+        if trial is None:
+            break
+        assert trial not in seen
+        seen.add(trial)
+        t.record(e.key, trial[0], trial[1], 1e-3)
+    assert seen == set(t.CANDIDATES)
+
+
+# -- HLO analyzer ------------------------------------------------------------
+
+
+def test_hlo_loop_weighted_flops():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=8)
+        out, _ = jax.lax.scan(body, out, None, length=3)
+        return out
+
+    sds = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    compiled = jax.jit(f).lower(sds, sds).compile()
+    st_ = hlo.analyze_hlo_text(compiled.as_text())
+    want = 11 * 2 * 128 ** 3
+    assert st_["flops"] == pytest.approx(want, rel=1e-6)
+
+
+def test_hlo_collective_link_bytes():
+    assert hlo._link_bytes("all-gather", 1600, 16) == \
+        pytest.approx(1500.0)
+    assert hlo._link_bytes("reduce-scatter", 100, 16) == \
+        pytest.approx(1500.0)
+    assert hlo._link_bytes("all-reduce", 800, 16) == \
+        pytest.approx(2 * 15 / 16 * 800)
+    assert hlo._link_bytes("collective-permute", 123, 2) == 123
+    assert hlo._link_bytes("all-gather", 100, 1) == 0.0
