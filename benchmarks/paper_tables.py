@@ -21,8 +21,10 @@ import numpy as np
 from repro.core import cost_model as cm
 from repro.core import instrument
 
+import os
+
 N_STREAM = 200_000
-REPS = 30
+REPS = int(os.environ.get("MDMP_BENCH_REPS", "30"))   # smoke: set to 1-2
 
 
 def _time(fn: Callable, *args) -> float:
@@ -177,6 +179,29 @@ def fig6b_selective_delay() -> list[tuple[str, float, str]]:
     return rows
 
 
+def halo_aggregation_model() -> list[tuple[str, float, str]]:
+    """The aggregation knob (beyond the paper's figures, same alpha-beta
+    machinery): predicted seconds-per-sweep of the k-aggregated deep-halo
+    Jacobi schedule for a 128 x 514 local block, per machine.  k=1 is the
+    paper's bulk schedule; the chosen-k row is what the managed runtime
+    would pick (messages amortised k x, tile streamed once per k sweeps,
+    redundant ghost trapezoid charged as flops)."""
+    rows = []
+    rows_local, cols = 128, 514
+    for hw in (cm.HECTOR_XE6, cm.HELIOS_BULLX, cm.JUQUEEN_BGQ, cm.TPU_V5E):
+        d = cm.decide_halo_aggregation(rows_local, cols, 8, hw=hw)
+        for k in (1, 2, 4, 8):
+            if k not in d.per_sweep_s:
+                continue
+            t = d.per_sweep_s[k]
+            rows.append((f"halo_agg_{hw.name}_k{k}", t * 1e6,
+                         f"x{d.bulk_sweep_s / t:.2f} vs bulk/sweep"))
+        rows.append((f"halo_agg_{hw.name}_chosen", float(d.k),
+                     f"k picked by cost model (pred "
+                     f"x{d.predicted_speedup:.2f})"))
+    return rows
+
+
 def all_tables() -> list[tuple[str, float, str]]:
     rows = []
     rows += table1_stream_in_region()
@@ -185,4 +210,5 @@ def all_tables() -> list[tuple[str, float, str]]:
     rows += fig5b_delay_pingpong()
     rows += fig6a_selective_pingpong()
     rows += fig6b_selective_delay()
+    rows += halo_aggregation_model()
     return rows

@@ -10,9 +10,11 @@ exchange, distributed over 8 (forced host) devices.
 Shows the full MDMP workflow from the paper's Figure 4:
   1. declare the communication (CommRegion directives),
   2. let the region instrument the computation (trace-time read/write
-     analysis) and plan each message (alpha-beta model),
-  3. run with the planned schedule — bulk (paper Fig 2) vs intermingled
-     (paper Fig 3) — and check they agree.
+     analysis) and plan each message (alpha-beta model) — including the
+     AGGREGATION knob: how many sweeps one k-row halo slab should carry,
+  3. run all three schedules — bulk (paper Fig 2), intermingled (paper
+     Fig 3), and aggregated (k sweeps per exchange, the temporally-blocked
+     deep-halo pipeline) — and check they agree.
 """
 
 import time
@@ -22,15 +24,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import CommRegion, halo
+from repro.core import CommRegion, halo, managed
 from repro.core import cost_model as cm
-from repro.kernels.stencil import jacobi_step_pallas
+from repro.kernels.stencil import jacobi_multistep_pallas, jacobi_step_pallas
 from repro.parallel.sharding import smap
 
 
 def main() -> None:
     mesh = jax.make_mesh((8,), ("x",))
     m, n = 1024, 514                       # global grid, rows sharded
+    iters = 48
     rng = np.random.default_rng(0)
     u0 = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
     f = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
@@ -39,6 +42,8 @@ def main() -> None:
     region = CommRegion("jacobi", axis_sizes={"x": 8})
     region.send("halo_up", axis="x", shape=(n,), dtype=np.float32)
     region.send("halo_down", axis="x", shape=(n,), dtype=np.float32)
+    region.halo("halo_agg", axis="x", rows_local=m // 8, cols=n,
+                dtype=np.float32)
     local = (m // 8, n)
 
     def shard_compute(u, ff):            # the per-shard stencil the halos
@@ -51,30 +56,42 @@ def main() -> None:
         jax.ShapeDtypeStruct(local, jnp.float32),
         compute_time_s=5.0 * local[0] * local[1] / cm.TPU_V5E.peak_flops)
     print(plan.summary())
+    k = plan.k_for("halo_agg")
+    print(f"cost model chose k={k}: one {k}-row halo slab per {k} sweeps "
+          f"(messages / sweep drop 2 -> {2.0 / k:.3f})")
+    print("decision trail:", managed.decision_log()[-1])
 
-    # 3. run both schedules
-    outs = {}
-    for mode in ("bulk", "interleaved"):
+    # 3. run all three schedules (the aggregated one with the planned k)
+    outs, times = {}, {}
+    for mode, kw in (("bulk", {}), ("interleaved", {}),
+                     (f"aggregated_k{k}", {"k": k})):
+        run_mode = "aggregated" if mode.startswith("aggregated") else mode
         fn = jax.jit(smap(
-            lambda u, ff, mode=mode: halo.jacobi_solve(u, ff, "x", 50, mode),
+            lambda u, ff, run_mode=run_mode, kw=kw: halo.jacobi_solve(
+                u, ff, "x", iters, run_mode, **kw),
             mesh, in_specs=(P("x"), P("x")), out_specs=P("x")))
         out = fn(u0, f)
         jax.block_until_ready(out)
         t0 = time.perf_counter()
         out = fn(u0, f)
         jax.block_until_ready(out)
+        times[mode] = time.perf_counter() - t0
         outs[mode] = np.asarray(out)
-        print(f"{mode:12s} 50 sweeps in {time.perf_counter() - t0:.3f}s")
-    np.testing.assert_allclose(outs["bulk"], outs["interleaved"], rtol=1e-5)
-    print("bulk (Fig 2) == intermingled (Fig 3): max diff",
-          np.abs(outs["bulk"] - outs["interleaved"]).max())
+        print(f"{mode:16s} {iters} sweeps in {times[mode]:.3f}s")
+    for mode, out in outs.items():
+        np.testing.assert_allclose(outs["bulk"], out, rtol=1e-5, atol=1e-5)
+    print("bulk (Fig 2) == intermingled (Fig 3) == aggregated: max diff",
+          max(np.abs(outs["bulk"] - o).max() for o in outs.values()))
 
-    # bonus: the Pallas stencil kernel on a single shard (interpret mode)
+    # bonus: the Pallas stencil kernels on a single shard (interpret mode)
     u_loc = u0[:m // 8 + 2]         # +2 boundary rows for the kernel
     out = jacobi_step_pallas(u_loc, f[:m // 8 + 2], blk_m=64,
                              blk_n=256,
                              interpret=True)
     print("pallas stencil kernel ok:", out.shape)
+    out_k = jacobi_multistep_pallas(u_loc, f[:m // 8 + 2], k=k, blk_m=64,
+                                    interpret=True)
+    print(f"pallas {k}-sweep temporally-blocked kernel ok:", out_k.shape)
 
 
 if __name__ == "__main__":

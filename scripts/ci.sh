@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + a benchmark smoke so perf rows can't silently rot.
+#
+#   scripts/ci.sh            # full tier-1 + benchmark smoke (REPS=2)
+#   MDMP_BENCH_REPS=10 scripts/ci.sh   # heavier benchmark pass
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== benchmark smoke (python -m benchmarks.run) =="
+out="$(MDMP_BENCH_REPS="${MDMP_BENCH_REPS:-2}" python -m benchmarks.run)"
+echo "$out" | tail -40
+# The CSV must contain the paper tables, the measured Jacobi k-sweep rows,
+# and no measured-suite subprocess error.
+echo "$out" | grep -q "^t1_db_triad_original," || {
+    echo "FAIL: paper-table rows missing"; exit 1; }
+echo "$out" | grep -q "jacobi_.*_aggregated_k" || {
+    echo "FAIL: aggregated Jacobi k-sweep rows missing"; exit 1; }
+echo "$out" | grep -q "halo_agg_tpu_v5e_chosen" || {
+    echo "FAIL: halo aggregation model rows missing"; exit 1; }
+echo "$out" | grep -q "measured_suite,0.00,ERROR" && {
+    echo "FAIL: measured suite subprocess errored"; exit 1; }
+echo "CI OK"

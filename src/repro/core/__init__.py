@@ -12,10 +12,13 @@ Public surface:
 """
 
 from repro.core.cost_model import (DEFAULT_HW, HECTOR_XE6, HELIOS_BULLX,
-                                   JUQUEEN_BGQ, TPU_V5E, HardwareModel,
+                                   JUQUEEN_BGQ, TPU_V5E,
+                                   HaloAggregationDecision, HardwareModel,
                                    RooflineTerms, crossover_compute_per_element,
-                                   decide, roofline)
-from repro.core.halo import (halo_exchange, jacobi_solve, jacobi_step_bulk,
+                                   decide, decide_halo_aggregation,
+                                   halo_sweep_time, roofline)
+from repro.core.halo import (halo_exchange, jacobi_solve,
+                             jacobi_step_aggregated, jacobi_step_bulk,
                              jacobi_step_overlapped)
 from repro.core.instrument import AccessRecord, RegionReport, analyze_region
 from repro.core.managed import (DecisionRecord, MDMPConfig,
@@ -24,7 +27,7 @@ from repro.core.managed import (DecisionRecord, MDMPConfig,
                                 managed_all_reduce, managed_all_to_all,
                                 managed_psum_scatter_gather,
                                 managed_reduce_scatter, matmul_reduce_scatter,
-                                use_config)
+                                resolve_halo_aggregation, use_config)
 from repro.core.overlap import (bucketed_all_reduce, fsdp_gather,
                                 fsdp_gather_tree, grad_accumulate,
                                 reduce_replicated_grads)
@@ -38,10 +41,13 @@ __all__ = [
     "ScheduleTuner", "TPU_V5E", "TunerEntry", "all_gather_matmul",
     "analyze_region", "bucketed_all_reduce", "call_site_key",
     "clear_decision_log", "crossover_compute_per_element", "decide",
-    "decision_log", "fsdp_gather", "fsdp_gather_tree", "get_config",
-    "grad_accumulate", "halo_exchange", "jacobi_solve", "jacobi_step_bulk",
+    "decide_halo_aggregation", "decision_log", "fsdp_gather",
+    "fsdp_gather_tree", "get_config", "grad_accumulate",
+    "HaloAggregationDecision", "halo_exchange", "halo_sweep_time",
+    "jacobi_solve", "jacobi_step_aggregated", "jacobi_step_bulk",
     "jacobi_step_overlapped", "managed_all_gather", "managed_all_reduce",
     "managed_all_to_all", "managed_psum_scatter_gather",
     "managed_reduce_scatter", "matmul_reduce_scatter",
-    "reduce_replicated_grads", "roofline", "use_config",
+    "reduce_replicated_grads", "resolve_halo_aggregation", "roofline",
+    "use_config",
 ]

@@ -10,7 +10,12 @@ each chunk's DMA with the adjacent chunk's compute.
 
 This module is the decision engine: given operand bytes, mesh-axis size,
 and an estimate of the compute available to hide the transfer, it predicts
-bulk vs interleaved cost and picks a chunk count.  Constants default to
+bulk vs interleaved cost and picks a chunk count.  It also owns the dual
+knob — message AGGREGATION (``decide_halo_aggregation``): when latency
+dominates, coarsen the schedule to one k-row halo slab per k stencil
+sweeps, trading alpha*(messages saved) + the k x HBM-streaming saving of
+the temporally-blocked kernel against beta*(f-ghost bytes) + the redundant
+ghost-trapezoid FLOPs.  Constants default to
 TPU v5e (the production target); the paper's machines (HECToR / HELIOS /
 JUQUEEN) are included so the paper's crossover figures can be reproduced
 by the benchmark harness.
@@ -329,6 +334,136 @@ def crossover_compute_chunked(n_elements: int, chunks: int,
         else:
             lo = mid
     return hi
+
+
+# ---------------------------------------------------------------------------
+# Halo aggregation decision (the paper's message-AGGREGATION knob)
+# ---------------------------------------------------------------------------
+#
+# MDMP's manager may also COARSEN communication: when per-message latency
+# (alpha) dominates, ship one k-row halo slab per k iterations instead of a
+# 1-row slab per iteration, and redundantly compute the ghost trapezoid
+# (MatlabMPI, astro-ph/0305090, measures the same latency dominance at
+# small payloads).  Per sweep, for a (rows x cols) local block:
+#
+#   comm(k)  = 2*alpha/k + 2*cols*B/link_bw        alpha amortised k x;
+#                                                  halo bytes/sweep constant
+#   mem(k)   = (3*rows + 4*k)*cols*B/(k*hbm_bw)    the temporally-blocked
+#                                                  kernel streams the tile
+#                                                  once per k sweeps
+#   flops(k) = (rows + 2*(k-1))*cols*c/peak        redundant ghost rows
+#
+#   t(k)     = max(mem, flops) + comm              (stencil overlaps DMA
+#                                                  with VPU work)
+#
+# k=1 is exactly the bulk schedule.  Aggregation wins while the k x saving
+# on alpha and HBM streaming outruns the 2*(k-1) redundant ghost rows; the
+# VMEM capacity of the tile (3 resident arrays of (blk+2k) x cols) caps k.
+
+
+#: flops per grid point of the 5-point Jacobi update (4 adds + 1 mul + ...)
+JACOBI_FLOPS_PER_POINT = 6.0
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloAggregationDecision:
+    """Outcome of the aggregation decision for one halo call site."""
+    k: int                        # chosen sweeps per exchange (1 = bulk)
+    per_sweep_s: dict[int, float]  # candidate k -> predicted seconds/sweep
+    bulk_sweep_s: float           # t(1)
+    aggregated_sweep_s: float     # t(k chosen)
+    comm_sweep_s: float           # comm term at chosen k
+    mem_sweep_s: float            # memory term at chosen k
+    flop_sweep_s: float           # redundant-compute term at chosen k
+
+    @property
+    def mode(self) -> str:
+        return "aggregated" if self.k > 1 else "bulk"
+
+    @property
+    def predicted_speedup(self) -> float:
+        if self.aggregated_sweep_s <= 0:
+            return 1.0
+        return self.bulk_sweep_s / self.aggregated_sweep_s
+
+
+def halo_sweep_terms(k: int, rows_local: int, cols: int, *,
+                     dtype_bytes: int = 4, hw: HardwareModel = DEFAULT_HW,
+                     flops_per_point: float = JACOBI_FLOPS_PER_POINT,
+                     axis_size: int = 2) -> tuple[float, float, float]:
+    """(comm_s, mem_s, flops_s) per sweep of the k-aggregated schedule.
+    With ``axis_size <= 1`` no bytes cross a link, so the comm term drops
+    and only the temporal-blocking (HBM) saving remains."""
+    k = max(1, k)
+    halo_bytes = cols * dtype_bytes
+    comm = (0.0 if axis_size <= 1
+            else 2.0 * hw.alpha_s / k + 2.0 * halo_bytes / hw.link_bw)
+    mem = ((3.0 * rows_local + 4.0 * k) * cols * dtype_bytes
+           / (k * hw.hbm_bw))
+    flops = ((rows_local + 2.0 * (k - 1)) * cols * flops_per_point
+             / hw.peak_flops)
+    return comm, mem, flops
+
+
+def halo_sweep_time(k: int, rows_local: int, cols: int, *,
+                    dtype_bytes: int = 4, hw: HardwareModel = DEFAULT_HW,
+                    flops_per_point: float = JACOBI_FLOPS_PER_POINT,
+                    axis_size: int = 2) -> float:
+    comm, mem, flops = halo_sweep_terms(
+        k, rows_local, cols, dtype_bytes=dtype_bytes, hw=hw,
+        flops_per_point=flops_per_point, axis_size=axis_size)
+    return max(mem, flops) + comm
+
+
+def decide_halo_aggregation(rows_local: int, cols: int, axis_size: int, *,
+                            dtype_bytes: int = 4,
+                            hw: HardwareModel = DEFAULT_HW,
+                            candidate_k: Sequence[int] = (1, 2, 4, 8),
+                            flops_per_point: float = JACOBI_FLOPS_PER_POINT,
+                            force_k: int | None = None
+                            ) -> HaloAggregationDecision:
+    """Pick how many sweeps each halo exchange should carry.
+
+    Candidates are dropped when the k-deep apron tile no longer fits VMEM
+    (3 resident (rows+2k) x cols arrays) or when k exceeds the local block
+    (the ghost trapezoid would swallow the whole shard); k=1 is the plain
+    bulk schedule (no VMEM-resident multi-sweep tile) and always survives.
+    ``axis_size=1`` still aggregates — the HBM-round-trip saving is local,
+    not collective — but its comm term is zero (no link crossed).
+    ``force_k`` is clamped to the same validity caps, so the returned k is
+    always safe to feed to ``halo.jacobi_solve``.
+    """
+    def sweep_time(k: int) -> float:
+        return halo_sweep_time(
+            k, rows_local, cols, dtype_bytes=dtype_bytes, hw=hw,
+            flops_per_point=flops_per_point, axis_size=axis_size)
+
+    def valid(k: int) -> bool:
+        if k > max(1, rows_local):
+            return False
+        if k > 1 and hw.vmem_bytes:
+            tile_rows = min(rows_local, 256) + 2 * k
+            if 3 * tile_rows * cols * dtype_bytes > hw.vmem_bytes:
+                return False
+        return True
+
+    times = {k: sweep_time(k) for k in sorted({1, *candidate_k})
+             if k >= 1 and valid(k)}
+    if force_k is not None:
+        best_k = max(1, int(force_k))
+        while best_k > 1 and not valid(best_k):
+            best_k -= 1
+        times.setdefault(best_k, sweep_time(best_k))
+    else:
+        best_k = min(times, key=lambda k: (times[k], k))
+    comm, mem, flops = halo_sweep_terms(
+        best_k, rows_local, cols, dtype_bytes=dtype_bytes, hw=hw,
+        flops_per_point=flops_per_point, axis_size=axis_size)
+    return HaloAggregationDecision(
+        k=best_k, per_sweep_s=times,
+        bulk_sweep_s=times.get(1, sweep_time(1)),
+        aggregated_sweep_s=times[best_k],
+        comm_sweep_s=comm, mem_sweep_s=mem, flop_sweep_s=flops)
 
 
 # ---------------------------------------------------------------------------

@@ -144,6 +144,40 @@ def _resolve(op: str, axis_name: str, x: Array, mode: str | None,
     return eff_mode, max(1, int(eff_chunks))
 
 
+def resolve_halo_aggregation(axis_name: str, axis_size: int,
+                             rows_local: int, cols: int, *,
+                             dtype_bytes: int = 4,
+                             candidate_k: Sequence[int] = (1, 2, 4, 8),
+                             mode: str | None = None,
+                             k: int | None = None
+                             ) -> cost_model.HaloAggregationDecision:
+    """The managed-runtime entry for the aggregation knob: pick how many
+    stencil sweeps each halo exchange should carry (k=1 = bulk) and log the
+    decision.  Called OUTSIDE shard_map at planning time — ``axis_size`` is
+    the static mesh extent, and the chosen k feeds
+    ``halo.jacobi_solve(mode="aggregated", k=...)``.
+
+    ``mode="bulk"`` (or a global MDMPConfig forcing bulk) pins k=1 — the
+    paper-faithful unmanaged baseline; ``k`` pins an explicit sweep count
+    (the tuner's measured override).  The DecisionRecord reuses ``chunks``
+    to carry k and the predicted fields to carry seconds-per-sweep.
+    """
+    cfg = get_config()
+    eff_mode = mode or cfg.mode
+    force_k = 1 if eff_mode == "bulk" else k
+    decision = cost_model.decide_halo_aggregation(
+        rows_local, cols, axis_size, dtype_bytes=dtype_bytes, hw=cfg.hw,
+        candidate_k=candidate_k, force_k=force_k)
+    if cfg.log_decisions:
+        _DECISION_LOG.append(DecisionRecord(
+            op="halo_aggregation", axis=axis_name,
+            nbytes=2 * decision.k * cols * dtype_bytes,
+            mode=decision.mode, chunks=decision.k,
+            predicted_bulk_s=decision.bulk_sweep_s,
+            predicted_interleaved_s=decision.aggregated_sweep_s))
+    return decision
+
+
 def _ring_perm(n: int, shift: int = 1) -> list[tuple[int, int]]:
     return [(i, (i + shift) % n) for i in range(n)]
 

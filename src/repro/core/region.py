@@ -32,10 +32,13 @@ from repro.core.managed import MDMPConfig, get_config
 class CommSpec:
     """One declared communication (a ``#pragma send``/``recv``/collective)."""
     label: str
-    kind: str                  # "send" | "recv" | "all_gather" | ...
+    kind: str                  # "send" | "recv" | "all_gather" | "halo" ...
     axis: str                  # mesh axis the message crosses
     nbytes: int
     collective: str = "all_gather"   # cost-model family
+    #: (rows_local, cols) of the stencil block for kind="halo" — the
+    #: aggregation decision needs the block geometry, not just bytes
+    shape: tuple | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +60,12 @@ class Plan:
         return self.entries[label].mode
 
     def chunks_for(self, label: str) -> int:
+        return self.entries[label].chunks
+
+    def k_for(self, label: str) -> int:
+        """Aggregation factor chosen for a halo declaration (sweeps per
+        k-row exchange; 1 = bulk).  Alias of ``chunks_for`` — the k rides
+        in the chunks slot."""
         return self.entries[label].chunks
 
     def summary(self) -> str:
@@ -110,6 +119,19 @@ class CommRegion:
                    collective: str) -> None:
         self._declare(label, collective, axis, shape, dtype, collective)
 
+    def halo(self, label: str, *, axis: str, rows_local: int, cols: int,
+             dtype) -> None:
+        """Declare a stencil halo exchange (rows sharded over ``axis``).
+        Planning runs the AGGREGATION decision for it: the resulting
+        PlanEntry's ``chunks`` is the chosen k (sweeps per k-row exchange;
+        1 = bulk), to be passed to ``halo.jacobi_solve(mode="aggregated",
+        k=plan.chunks_for(label))``."""
+        import numpy as np
+        nbytes = int(cols) * np.dtype(dtype).itemsize   # one 1-row slab
+        self._specs.append(CommSpec(label=label, kind="halo", axis=axis,
+                                    nbytes=nbytes, collective="halo",
+                                    shape=(int(rows_local), int(cols))))
+
     # -- planning -----------------------------------------------------------
 
     def plan(self, fn: Callable, *example_args: Any,
@@ -125,8 +147,25 @@ class CommRegion:
         report = instrument.analyze_region(
             fn, *example_args, tracked_args=list(tracked_args), labels=labels)
 
+        from repro.core import managed
+
         entries: dict[str, PlanEntry] = {}
         for spec in self._specs:
+            if spec.kind == "halo":
+                # The aggregation knob: pick k sweeps per exchange.  Routed
+                # through managed.resolve_halo_aggregation so the choice
+                # lands in the MDMP decision log like every other schedule.
+                rows_local, cols = spec.shape
+                n = self.axis_sizes.get(spec.axis, 1)
+                with managed.use_config(self.config):
+                    d = managed.resolve_halo_aggregation(
+                        spec.axis, n, rows_local, cols,
+                        dtype_bytes=max(1, spec.nbytes // max(1, cols)))
+                entries[spec.label] = PlanEntry(
+                    spec=spec, mode=d.mode, chunks=d.k, overlap_budget=1.0,
+                    predicted_bulk_s=d.bulk_sweep_s,
+                    predicted_interleaved_s=d.aggregated_sweep_s)
+                continue
             budget = (report.overlap_budget(spec.label)
                       if spec.label in report.records else 1.0)
             # Compute time available for overlap: caller-supplied estimate

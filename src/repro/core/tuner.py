@@ -53,6 +53,11 @@ class ScheduleTuner:
     CANDIDATES = (("bulk", 1), ("interleaved", 1), ("interleaved", 2),
                   ("interleaved", 4))
 
+    #: candidate (mode, k) variants for halo call sites — ``chunks`` carries
+    #: the aggregation factor k (sweeps per exchange); bulk is k=1
+    HALO_CANDIDATES = (("bulk", 1), ("aggregated", 2), ("aggregated", 4),
+                       ("aggregated", 8))
+
     def __init__(self, hw: HardwareModel = TPU_V5E,
                  path: str | None = None):
         self.hw = hw
@@ -75,6 +80,26 @@ class ScheduleTuner:
                                   hw=self.hw, collective=collective)
             entry = TunerEntry(key=key, mode=d.mode, chunks=d.chunks,
                                predicted_s=d.interleaved_time_s)
+            self._entries[key] = entry
+        return entry
+
+    def decide_halo(self, axis: str, axis_size: int, rows_local: int,
+                    cols: int, *, dtype_str: str = "float32",
+                    dtype_bytes: int = 4) -> TunerEntry:
+        """Aggregation decision for a halo call site: seeded from the cost
+        model's k (``chunks`` carries k), then overridden by measurements
+        fed back through ``record(key, "aggregated", k, seconds)`` — the
+        paper's iteration-(k)->(k+1) adaptation applied to the aggregation
+        knob.  Persisted like every other entry."""
+        key = call_site_key("halo_jacobi", (rows_local, cols), dtype_str,
+                            axis, axis_size)
+        entry = self._entries.get(key)
+        if entry is None:
+            d = cost_model.decide_halo_aggregation(
+                rows_local, cols, axis_size, dtype_bytes=dtype_bytes,
+                hw=self.hw)
+            entry = TunerEntry(key=key, mode=d.mode, chunks=d.k,
+                               predicted_s=d.aggregated_sweep_s)
             self._entries[key] = entry
         return entry
 
@@ -101,12 +126,15 @@ class ScheduleTuner:
     def next_trial(self, key: str) -> tuple[str, int] | None:
         """Suggest an untried candidate variant for this call site (the
         paper's 'evaluate different communication optimisations at
-        runtime'), or None when the sweep is complete."""
+        runtime'), or None when the sweep is complete.  Halo call sites
+        sweep the aggregation factors instead of the chunk counts."""
+        candidates = (self.HALO_CANDIDATES if key.startswith("halo")
+                      else self.CANDIDATES)
         entry = self._entries.get(key)
         if entry is None:
-            return self.CANDIDATES[0]
+            return candidates[0]
         tried = set(entry.measured_s)
-        for mode, chunks in self.CANDIDATES:
+        for mode, chunks in candidates:
             if f"{mode}:{chunks}" not in tried:
                 return mode, chunks
         return None

@@ -39,3 +39,11 @@ def jacobi_step_ref(u: Array, f: Array) -> Array:
     new = 0.25 * (u[:-2, 1:-1] + u[2:, 1:-1] + u[1:-1, :-2] + u[1:-1, 2:]
                   - f[1:-1, 1:-1])
     return u.at[1:-1, 1:-1].set(new.astype(u.dtype))
+
+
+def jacobi_multistep_ref(u: Array, f: Array, k: int) -> Array:
+    """k unit Jacobi sweeps — the bulk oracle for the temporally-blocked
+    kernel (kernels/stencil.py::jacobi_multistep_pallas)."""
+    for _ in range(k):
+        u = jacobi_step_ref(u, f)
+    return u

@@ -1,13 +1,28 @@
-"""Jacobi 5-point stencil — Pallas TPU kernel (the paper's own kernel).
+"""Jacobi 5-point stencil — Pallas TPU kernels (the paper's own kernel).
 
 The paper's running example (Fig. 2-4) is a 2-D Jacobi sweep; MDMP manages
-its halo exchange.  Within a shard the sweep is a memory-bound stencil —
-this kernel tiles it through VMEM.  Overlapping (haloed) reads are
-expressed the TPU-idiomatic way: the four shifted neighbour views of ``u``
-are passed as separate inputs, so every BlockSpec stays disjoint and each
-grid step streams five aligned (blk_m, blk_n) tiles HBM->VMEM and writes
-one.  blk_n multiples of 128 keep the lanes full.  Oracle:
-kernels/ref.py::jacobi_step_ref.
+its halo exchange.  Within a shard the sweep is a memory-bound stencil.
+Two kernels live here:
+
+  * ``jacobi_step_pallas``      — one sweep, tiled through VMEM.  Overlapping
+    (haloed) reads are expressed the TPU-idiomatic way: the four shifted
+    neighbour views of ``u`` are passed as separate inputs, so every
+    BlockSpec stays disjoint.  Oracle: kernels/ref.py::jacobi_step_ref.
+
+  * ``jacobi_multistep_pallas`` — the temporally-blocked kernel: a row-tile
+    (plus a k-deep halo apron) is streamed HBM->VMEM ONCE and ``k`` sweeps
+    are applied in VMEM before the tile is written back, cutting HBM traffic
+    ~k x.  Each sweep's valid region shrinks by one row at every tile edge
+    (the classic trapezoidal / redundant-ghost scheme), which is why the
+    apron must be k rows deep.  Rows pinned by physical Dirichlet
+    boundaries do NOT shrink: a per-call frozen-row count (SMEM scalar,
+    applied in the first/last grid block only) keeps boundary and
+    out-of-domain ghost rows at their initial value through all k sweeps.
+    Oracle: k applications of jacobi_step_ref.
+
+The same trapezoid powers the distributed deep-halo schedule
+(core/halo.py::jacobi_solve with k>1): there the k-row apron arrives from
+ring neighbours via one halo exchange per k sweeps instead of per sweep.
 """
 
 from __future__ import annotations
@@ -16,7 +31,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
 
@@ -53,3 +70,132 @@ def jacobi_step_pallas(u: Array, f: Array, *, blk_m: int = 256,
         interpret=interpret,
     )(*views)
     return u.at[1:-1, 1:-1].set(interior)
+
+
+# ---------------------------------------------------------------------------
+# Temporally-blocked multi-sweep kernel (k sweeps per HBM round-trip)
+# ---------------------------------------------------------------------------
+
+
+def ksweep_trapezoid(tile: Array, f_tile: Array, k: int, frozen_top,
+                     frozen_bot) -> Array:
+    """Apply ``k`` masked Jacobi sweeps to a halo-padded row tile.
+
+    tile, f_tile: [T, N] float32.  Columns 0 and N-1 are Dirichlet (never
+    updated); rows 0 and T-1 are likewise never updated (each sweep's
+    stencil cannot reach them).  ``frozen_top``/``frozen_bot`` additionally
+    pin that many leading/trailing rows to their INITIAL value through all
+    k sweeps — used for physical-boundary ghost rows, which must act as a
+    constant Dirichlet condition rather than participate in the redundant
+    ghost trapezoid.  May be traced scalars.
+
+    Validity contract (the trapezoid): if tile rows [0, T) hold iteration-0
+    values, then after this call rows [k, T-k) hold iteration-k values
+    (frozen edges do not shrink).  Shared verbatim by the Pallas kernel and
+    the jnp deep-halo path so both produce bit-identical schedules.
+    """
+    t_rows = tile.shape[0]
+    rows = lax.broadcasted_iota(jnp.int32, (t_rows, 1), 0)
+    upd = (rows >= frozen_top) & (rows < t_rows - frozen_bot)
+    for _ in range(k):                            # k is static: unrolled
+        new = 0.25 * (tile[:-2, 1:-1] + tile[2:, 1:-1]
+                      + tile[1:-1, :-2] + tile[1:-1, 2:]
+                      - f_tile[1:-1, 1:-1])
+        mid = jnp.concatenate([tile[1:-1, :1], new, tile[1:-1, -1:]], axis=1)
+        swept = jnp.concatenate([tile[:1], mid, tile[-1:]], axis=0)
+        tile = jnp.where(upd, swept, tile)
+    return tile
+
+
+def _jacobi_multistep_kernel(frozen_ref, utop_ref, umid_ref, ubot_ref,
+                             ftop_ref, fmid_ref, fbot_ref, o_ref, *, k: int):
+    """One grid step: assemble the (blk_m + 2k, N) apron tile in VMEM from
+    the three disjoint row-block inputs, run k sweeps, write the blk_m
+    center rows.  Frozen-edge depths apply only in the first/last block."""
+    i = pl.program_id(0)
+    nb = pl.num_programs(0)
+    frozen_top = jnp.where(i == 0, frozen_ref[0, 0], 0)
+    frozen_bot = jnp.where(i == nb - 1, frozen_ref[0, 1], 0)
+    tile = jnp.concatenate(
+        [utop_ref[...], umid_ref[...], ubot_ref[...]], axis=0
+    ).astype(jnp.float32)
+    f_tile = jnp.concatenate(
+        [ftop_ref[...], fmid_ref[...], fbot_ref[...]], axis=0
+    ).astype(jnp.float32)
+    out = ksweep_trapezoid(tile, f_tile, k, frozen_top, frozen_bot)
+    o_ref[...] = out[k:-k].astype(o_ref.dtype)
+
+
+def jacobi_ksweep_pallas(u_pad: Array, f_pad: Array, k: int, frozen_top,
+                         frozen_bot, *, blk_m: int = 256,
+                         interpret: bool = False) -> Array:
+    """k Jacobi sweeps over the center rows of a k-halo-padded block.
+
+    u_pad, f_pad: [m + 2k, N] — the local block with its k-row apron (ghost
+    slabs from ring neighbours, zeros outside the physical domain).
+    Returns the [m, N] center after k sweeps; the apron is consumed by the
+    trapezoidal shrink, so the result is exact (allclose to k unit sweeps).
+
+    ``frozen_top``/``frozen_bot`` (int scalars, may be traced) pin that many
+    leading/trailing PADDED rows — pass k at a non-periodic physical edge
+    so the zero ghost slab behaves as a constant boundary, 0 elsewhere.
+
+    Each grid step streams blk_m + 2k rows of u and f HBM->VMEM, runs all
+    k sweeps on the VMEM-resident tile, and writes blk_m rows back: the
+    HBM traffic per sweep drops ~k x vs. calling jacobi_step_pallas k
+    times, which is the whole point of the temporal blocking.
+    """
+    assert k >= 1
+    mp, n = u_pad.shape
+    m = mp - 2 * k
+    assert m >= 1, (mp, k)
+    if m % blk_m != 0 or blk_m % k != 0 or blk_m < k:
+        blk_m = m                                 # single row-tile fallback
+    grid = (m // blk_m,)
+
+    # Three disjoint row-block views assemble each (blk_m + 2k)-row apron
+    # tile: top apron rows [i*blk_m, i*blk_m + k), center rows
+    # [i*blk_m + k, i*blk_m + k + blk_m), bottom apron rows
+    # [i*blk_m + k + blk_m, i*blk_m + 2k + blk_m) — all in u_pad coords.
+    halo_stride = max(blk_m // k, 1)              # block-index stride of the
+    top_spec = pl.BlockSpec((k, n), lambda i: (i * halo_stride, 0))
+    mid_spec = pl.BlockSpec((blk_m, n), lambda i: (i, 0))
+    frozen = jnp.stack([jnp.asarray(frozen_top, jnp.int32),
+                        jnp.asarray(frozen_bot, jnp.int32)]).reshape(1, 2)
+    kernel = functools.partial(_jacobi_multistep_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # frozen depths
+            top_spec,                                    # u top apron
+            mid_spec,                                    # u center
+            top_spec,                                    # u bottom apron
+            top_spec,                                    # f top apron
+            mid_spec,                                    # f center
+            top_spec,                                    # f bottom apron
+        ],
+        out_specs=mid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), u_pad.dtype),
+        interpret=interpret,
+    )(frozen, u_pad, u_pad[k:-k], u_pad[blk_m + k:],
+      f_pad, f_pad[k:-k], f_pad[blk_m + k:])
+
+
+def jacobi_multistep_pallas(u: Array, f: Array, *, k: int,
+                            blk_m: int = 256,
+                            interpret: bool = False) -> Array:
+    """``k`` Jacobi sweeps on the interior of ``u`` ([M, N]) in ONE HBM
+    round-trip — temporally-blocked equivalent of calling
+    ``jacobi_step_pallas`` k times (boundary rows/cols Dirichlet, same
+    oracle: k x jacobi_step_ref).
+
+    Implementation: pad with k zero rows top and bottom, freeze the padding
+    plus the true boundary row (k + 1 rows) so the Dirichlet condition
+    survives all k sweeps, and run the trapezoidal slab kernel.
+    """
+    z = jnp.zeros((k,) + u.shape[1:], u.dtype)
+    u_pad = jnp.concatenate([z, u, z], axis=0)
+    f_pad = jnp.concatenate([z, f, z], axis=0)
+    return jacobi_ksweep_pallas(u_pad, f_pad, k, k + 1, k + 1,
+                                blk_m=blk_m, interpret=interpret)

@@ -4,6 +4,9 @@ engine's invariants must hold for ANY workload."""
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (test extra)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import cost_model as cm
@@ -93,3 +96,61 @@ def test_selective_pingpong_model():
         bulk, fine = cm.pingpong_times(1024, 0.0, hw, sent_elements=sent)
         gaps.append(fine - bulk)
     assert gaps[0] > gaps[1] > gaps[2]
+
+
+# -- halo aggregation (the managed message-aggregation knob) -----------------
+
+
+@given(rows=st.integers(min_value=8, max_value=4096),
+       cols=st.integers(min_value=16, max_value=4096),
+       k=st.integers(min_value=1, max_value=32))
+@settings(max_examples=200, deadline=None)
+def test_halo_sweep_time_positive(rows, cols, k):
+    t = cm.halo_sweep_time(k, rows, cols)
+    assert t > 0 and math.isfinite(t)
+
+
+@given(rows=st.integers(min_value=8, max_value=4096),
+       cols=st.integers(min_value=16, max_value=4096))
+@settings(max_examples=200, deadline=None)
+def test_halo_decision_never_worse_than_bulk(rows, cols):
+    """The manager must never pick a k it predicts to be slower than the
+    bulk (k=1) schedule."""
+    d = cm.decide_halo_aggregation(rows, cols, 8)
+    assert d.aggregated_sweep_s <= d.bulk_sweep_s * (1 + 1e-9)
+    assert d.k in d.per_sweep_s
+    assert d.per_sweep_s[d.k] == min(d.per_sweep_s.values())
+
+
+def test_halo_aggregation_prefers_deep_halos_when_latency_dominates():
+    """Small local blocks on a high-alpha machine: per-message latency
+    dominates, so the manager must aggregate (k > 1) — the MatlabMPI /
+    MDMP latency-dominance regime."""
+    d = cm.decide_halo_aggregation(128, 514, 8, hw=cm.TPU_V5E)
+    assert d.k > 1
+    assert d.mode == "aggregated"
+    assert d.predicted_speedup > 1.0
+
+
+def test_halo_aggregation_force_bulk():
+    d = cm.decide_halo_aggregation(128, 514, 8, force_k=1)
+    assert d.k == 1 and d.mode == "bulk"
+    assert d.aggregated_sweep_s == pytest.approx(d.bulk_sweep_s)
+
+
+def test_halo_aggregation_respects_block_height():
+    """k can never exceed the local block (the ghost trapezoid would
+    swallow the whole shard)."""
+    d = cm.decide_halo_aggregation(4, 514, 8, candidate_k=(1, 2, 4, 8))
+    assert d.k <= 4
+
+
+def test_halo_terms_structure():
+    """alpha amortises k x; halo bytes per sweep stay constant; redundant
+    flops grow with k."""
+    c1, m1, f1 = cm.halo_sweep_terms(1, 256, 514)
+    c8, m8, f8 = cm.halo_sweep_terms(8, 256, 514)
+    hw = cm.TPU_V5E
+    assert c1 - c8 == pytest.approx(2 * hw.alpha_s * (1 - 1 / 8))
+    assert m8 < m1                     # k x fewer HBM round-trips
+    assert f8 > f1                     # ghost trapezoid is extra compute

@@ -5,11 +5,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (test extra)")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.stencil import jacobi_step_pallas
+from repro.kernels.stencil import (jacobi_ksweep_pallas,
+                                   jacobi_multistep_pallas,
+                                   jacobi_step_pallas)
 
 
 def _rand(rng, shape, dtype):
@@ -94,6 +99,61 @@ def test_jacobi_pallas_vs_ref(m, n, bm, bn, dtype):
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32),
                                rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("m,n,bm", [
+    (66, 130, 64),        # single-tile fallback (66 % 64 != 0)
+    (256, 130, 64),       # 4-block grid
+    (128, 258, 16),       # 8-block grid, tiny tiles
+])
+@pytest.mark.parametrize("k", [1, 2, 3, 4, 8])
+def test_jacobi_multistep_vs_k_unit_sweeps(m, n, bm, k):
+    """The temporally-blocked kernel (k sweeps per HBM round-trip) must
+    match k applications of the unit-sweep oracle exactly — the trapezoid
+    plus frozen Dirichlet edges is redundant compute, not approximation."""
+    rng = np.random.default_rng(7)
+    u = _rand(rng, (m, n), jnp.float32)
+    f = _rand(rng, (m, n), jnp.float32)
+    out = jacobi_multistep_pallas(u, f, k=k, blk_m=bm, interpret=True)
+    want = ref.jacobi_multistep_ref(u, f, k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_jacobi_multistep_bf16():
+    rng = np.random.default_rng(8)
+    u = _rand(rng, (128, 130), jnp.bfloat16)
+    f = _rand(rng, (128, 130), jnp.bfloat16)
+    out = jacobi_multistep_pallas(u, f, k=4, blk_m=32, interpret=True)
+    want = ref.jacobi_multistep_ref(u, f, 4)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_jacobi_ksweep_slab_interior(k):
+    """The distributed slab kernel: with a k-deep apron of true neighbour
+    rows (frozen depths 0), the center must equal k unit sweeps of the
+    larger grid restricted to the center rows."""
+    rng = np.random.default_rng(9)
+    m, n = 64, 130
+    big = _rand(rng, (m + 2 * k, n), jnp.float32)
+    fbig = _rand(rng, (m + 2 * k, n), jnp.float32)
+    out = jacobi_ksweep_pallas(big, fbig, k, 0, 0, blk_m=32, interpret=True)
+    # Oracle: k sweeps on the padded grid where EVERY row updates (the slab
+    # kernel's apron rows are live neighbour rows, not Dirichlet): emulate
+    # by padding the big grid with one more frozen ring per sweep.
+    want = big
+    for _ in range(k):
+        z = jnp.zeros((1, n), jnp.float32)
+        up = jnp.concatenate([z, want, z], axis=0)
+        new = 0.25 * (up[:-2, 1:-1] + up[2:, 1:-1] + up[1:-1, :-2]
+                      + up[1:-1, 2:] - fbig[:, 1:-1])
+        want = want.at[:, 1:-1].set(new)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(want[k:-k]),
+                               rtol=1e-6, atol=1e-6)
 
 
 def test_jacobi_converges():

@@ -8,6 +8,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (test extra)")
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import ckpt
@@ -141,6 +144,29 @@ def test_tuner_trial_sweep():
         seen.add(trial)
         t.record(e.key, trial[0], trial[1], 1e-3)
     assert seen == set(t.CANDIDATES)
+
+
+def test_tuner_halo_aggregation_site(tmp_path):
+    """Halo call sites: seeded from the cost model's aggregation decision,
+    swept over HALO_CANDIDATES, measured overrides persisted."""
+    t = tuner.ScheduleTuner(path=str(tmp_path / "halo.json"))
+    e = t.decide_halo("x", 8, 128, 514)
+    assert e.mode == "aggregated" and e.chunks > 1    # latency dominates
+    assert e.key.startswith("halo_jacobi")
+    assert t.next_trial(e.key) == t.HALO_CANDIDATES[0]
+    # measurements disagree with the model: bulk measured faster
+    t.record(e.key, "aggregated", e.chunks, 5e-4)
+    t.record(e.key, "bulk", 1, 1e-4)
+    assert t.entries[e.key].mode == "bulk"
+    t.save()
+    t2 = tuner.ScheduleTuner(path=str(tmp_path / "halo.json"))
+    assert t2.entries[e.key].mode == "bulk"
+    # the trial sweep walks the halo candidate set, not the ring one
+    seen = set()
+    while (trial := t2.next_trial(e.key)) is not None:
+        seen.add(trial)
+        t2.record(e.key, trial[0], trial[1], 1e-3)
+    assert seen <= set(t.HALO_CANDIDATES)
 
 
 # -- HLO analyzer ------------------------------------------------------------
