@@ -139,12 +139,116 @@ def bench_jacobi(mesh) -> list[tuple[str, float, str]]:
     return rows
 
 
+def bench_ring_attention(mesh) -> list[tuple[str, float, str]]:
+    """Long-context causal prefill attention: bulk KV-gather vs ulysses
+    a2a vs ring streaming (PR 2 tentpole).  Every schedule is asserted
+    allclose against the attention_sp bulk oracle; the managed collective
+    is also measured head-to-head (all-gather-KV flash vs streamed ring
+    with causal step-skipping), and the cost model's three-way decision
+    lands in the trail row."""
+    from repro.configs.base import ModelConfig
+    from repro.models import attention
+    from repro.parallel.sharding import MeshCtx, smap as smap2
+
+    rows = []
+    tp = 8
+    mesh2 = jax.make_mesh((1, tp), ("data", "model"))
+    cfg = ModelConfig(name="bench", family="dense", n_layers=1,
+                      d_model=128, n_heads=8, n_kv_heads=2, d_ff=256,
+                      vocab_size=256, d_head=64, tp_multiple=tp)
+    hp, hd = cfg.padded_heads, cfg.head_dim
+    kvh = attention.padded_kv_heads(cfg)
+    rng = np.random.default_rng(7)
+    b, S, d = 1, 4096, cfg.d_model
+    x = jnp.asarray(rng.normal(size=(b, S, d)).astype(np.float32) * 0.1)
+    params = (
+        jnp.asarray(rng.normal(size=(d, hp * hd)).astype(np.float32) * 0.1),
+        jnp.asarray(rng.normal(size=(d, 2 * kvh * hd)).astype(np.float32)
+                    * 0.1),
+        jnp.asarray(rng.normal(size=(hp * hd, d)).astype(np.float32) * 0.1),
+    )
+    pspecs = (P(None, "model"), P(None, None), P("model", None))
+
+    def build(fn, mode):
+        ctx = MeshCtx.from_mesh(mesh2, mdmp_mode=mode)
+
+        def body(x_, wq, wkv, wo):
+            return fn(x_, {"w_q": wq, "w_kv": wkv, "w_o": wo}, cfg, ctx,
+                      causal=True)
+        return jax.jit(smap2(body, mesh2,
+                             in_specs=(P(None, "model"),) + pspecs,
+                             out_specs=P(None, "model")))
+
+    oracle_fn = build(attention.attention_sp, "bulk")
+    oracle = np.asarray(oracle_fn(x, *params))
+    t_bulk = _time(oracle_fn, x, *params)
+    rows.append((f"ring_attn_S{S}_bulk_gather", t_bulk * 1e6, ""))
+    for name, fn, mode in (
+            ("ulysses", attention.attention_sp_ulysses, "bulk"),
+            ("ring", attention.attention_sp_ring, "interleaved")):
+        f = build(fn, mode)
+        np.testing.assert_allclose(np.asarray(f(x, *params)), oracle,
+                                   rtol=3e-4, atol=3e-5)
+        t = _time(f, x, *params)
+        rows.append((f"ring_attn_S{S}_{name}", t * 1e6,
+                     f"x{t_bulk / t:.2f} vs bulk; allclose=bulk"))
+
+    # the managed collective head-to-head: all-gather-KV flash vs streamed
+    # ring (causal step-skipping) on the same qkv operands
+    q = jnp.asarray(rng.normal(size=(b, S, hp, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, S, kvh, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, S, kvh, hd)).astype(np.float32))
+    mesh1 = jax.make_mesh((8,), ("x",))
+    times = {}
+    outs = {}
+    for mode in ("bulk", "interleaved"):
+        f = jax.jit(smap(
+            lambda q_, k_, v_, mode=mode: managed.managed_ring_attention(
+                q_, k_, v_, "x", True, 0, mode),
+            mesh1, in_specs=(P(None, "x"),) * 3, out_specs=P(None, "x")))
+        outs[mode] = np.asarray(f(q, k, v))
+        times[mode] = _time(f, q, k, v)
+    np.testing.assert_allclose(outs["interleaved"], outs["bulk"],
+                               rtol=3e-4, atol=3e-5)
+    rows.append((f"ring_attn_op_S{S}_kvgather", times["bulk"] * 1e6, ""))
+    rows.append((f"ring_attn_op_S{S}_streamed", times["interleaved"] * 1e6,
+                 f"x{times['bulk'] / times['interleaved']:.2f} vs KV-gather"
+                 f" (causal step-skip); allclose"))
+
+    # the managed decision: cost-model seed -> measured override (the
+    # paper's iteration-(k)->(k+1) adaptation) -> logged in the trail
+    from repro.core.tuner import ScheduleTuner
+    tuner = ScheduleTuner()
+    entry = tuner.decide_attention("model", tp, b, S // tp, hp, kvh, hd, d,
+                                   dtype_str="float32", dtype_bytes=4)
+    seed_schedule = entry.mode
+    measured = {"bulk": t_bulk,
+                "ulysses": next(t for n, t, _ in rows
+                                if n.endswith("_ulysses")) / 1e6,
+                "ring": next(t for n, t, _ in rows
+                             if n.endswith("_ring")) / 1e6}
+    for sched, t in measured.items():
+        tuner.record(entry.key, sched, 1, t)
+    winner = tuner.entries[entry.key].mode
+    managed.clear_decision_log()
+    decision = managed.resolve_attention_schedule(
+        "model", tp, b, S // tp, hp, kvh, hd, d, dtype_bytes=4,
+        causal=True, schedule=winner)
+    rec = managed.decision_log()[-1]
+    rows.append((f"ring_attn_decision_{decision.schedule}",
+                 measured[winner] * 1e6,
+                 f"tuner-measured winner (seed={seed_schedule}); "
+                 f"trail={rec.op}({rec.mode})"))
+    return rows
+
+
 def main_child() -> None:
     mesh = jax.make_mesh((8,), ("x",))
     rows = []
     rows += bench_managed_collectives(mesh)
     rows += bench_pingpong(mesh)
     rows += bench_jacobi(mesh)
+    rows += bench_ring_attention(mesh)
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
 

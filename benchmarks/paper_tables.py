@@ -202,6 +202,32 @@ def halo_aggregation_model() -> list[tuple[str, float, str]]:
     return rows
 
 
+def attention_schedule_model() -> list[tuple[str, float, str]]:
+    """The attention schedule knob (PR 2 tentpole, same alpha-beta
+    machinery): predicted seconds-per-layer for bulk sequence-gather vs
+    ulysses a2a vs ring streaming on a long-context prefill point
+    (S = 64k over tp = 8, 32 heads x 128, D = 4096, bf16), per machine.
+    The chosen row is what the managed runtime picks; on machines with
+    real link bandwidth the ring hides the KV transfer under the
+    per-block flash while the gather schedules pay bytes ∝ S·B·D."""
+    rows = []
+    tp, s_local = 8, 65536 // 8
+    for hw in (cm.HECTOR_XE6, cm.HELIOS_BULLX, cm.JUQUEEN_BGQ, cm.TPU_V5E):
+        for causal in (False, True):
+            tag = "causal" if causal else "full"
+            d = cm.decide_attention_schedule(
+                1, s_local, 32, 8, 128, 4096, tp, dtype_bytes=2,
+                causal=causal, hw=hw)
+            for sched, t in sorted(d.times_s.items()):
+                rows.append((f"attn_sched_{hw.name}_{tag}_{sched}",
+                             t * 1e6, f"x{d.bulk_s / t:.2f} vs bulk"))
+            rows.append((f"attn_sched_{hw.name}_{tag}_chosen",
+                         d.chosen_s * 1e6,
+                         f"{d.schedule} picked by cost model (pred "
+                         f"x{d.predicted_speedup:.2f})"))
+    return rows
+
+
 def all_tables() -> list[tuple[str, float, str]]:
     rows = []
     rows += table1_stream_in_region()
@@ -211,4 +237,5 @@ def all_tables() -> list[tuple[str, float, str]]:
     rows += fig6a_selective_pingpong()
     rows += fig6b_selective_delay()
     rows += halo_aggregation_model()
+    rows += attention_schedule_model()
     return rows

@@ -22,6 +22,15 @@ echo "$out" | grep -q "jacobi_.*_aggregated_k" || {
     echo "FAIL: aggregated Jacobi k-sweep rows missing"; exit 1; }
 echo "$out" | grep -q "halo_agg_tpu_v5e_chosen" || {
     echo "FAIL: halo aggregation model rows missing"; exit 1; }
+# Ring-attention smoke: the bulk/ulysses/ring sweep must have run (short-S
+# measured rows + modeled schedule table) and the decision trail must
+# contain an attention entry with the winning schedule.
+echo "$out" | grep -q "ring_attn_.*_ring," || {
+    echo "FAIL: measured ring-attention sweep rows missing"; exit 1; }
+echo "$out" | grep -q "attn_sched_tpu_v5e_causal_chosen" || {
+    echo "FAIL: attention schedule model rows missing"; exit 1; }
+echo "$out" | grep -q "ring_attn_decision_.*trail=attention_schedule" || {
+    echo "FAIL: attention decision trail entry missing"; exit 1; }
 echo "$out" | grep -q "measured_suite,0.00,ERROR" && {
     echo "FAIL: measured suite subprocess errored"; exit 1; }
 echo "CI OK"

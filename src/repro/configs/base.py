@@ -71,8 +71,11 @@ class ModelConfig:
     norm_eps: float = 1e-5
     tie_embeddings: bool = False
     dtype: str = "bfloat16"
-    # -- attention comm strategy: "megatron" (AG-matmul rings) or
-    # "ulysses" (a2a head/seq switch — long-context prefill, §Perf) -------
+    # -- attention comm strategy: "megatron" (AG-matmul rings), "ulysses"
+    # (a2a head/seq switch), "ring" (context parallelism: KV streamed
+    # around 'model' under flash compute — O(S_loc) activation memory), or
+    # "auto" (the managed runtime picks per call site from the cost model
+    # and logs the DecisionRecord; EXPERIMENTS.md §Attention-schedules) ---
     attn_impl: str = "megatron"
     # -- training memory knobs ------------------------------------------------
     remat: bool = True

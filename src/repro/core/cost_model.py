@@ -467,6 +467,124 @@ def decide_halo_aggregation(rows_local: int, cols: int, axis_size: int, *,
 
 
 # ---------------------------------------------------------------------------
+# Attention schedule decision (bulk gather vs ulysses a2a vs ring streaming)
+# ---------------------------------------------------------------------------
+#
+# The SP-flow attention has three managed schedules (models/attention.py);
+# per the MDMP contract the manager picks one per call site from the same
+# alpha-beta machinery:
+#
+#   bulk (megatron)  — all-gather the SEQUENCE activations for the qkv
+#                      matmuls (bytes ∝ S·B·D) + matmul-reduce-scatter of
+#                      the output, then one full-sequence flash on local
+#                      heads.
+#   ulysses          — gather the q/o WEIGHTS over 'model' (bytes ∝ D·H·hd)
+#                      and switch seq<->head sharding with two all_to_alls
+#                      (bytes ∝ S·B·H·hd/tp) + a small KV seq-gather, then
+#                      the same full-sequence flash.
+#   ring             — q stays sequence-sharded; KV blocks stream around
+#                      the ring under the flash compute (the paper's
+#                      Figure-3 "send each datum as soon as it is produced"
+#                      mapped onto context parallelism).  Per step the cost
+#                      is max(flash_flops, link_time) + alpha: O(S_loc)
+#                      activation memory and the KV transfer fully hidden
+#                      once the per-block flash dominates the link.
+#
+# qkv/o projection FLOPs are identical across schedules and excluded; the
+# attention FLOPs are identical in total but scheduled differently.  For
+# causal masks the ring skips fully-masked future blocks, making the
+# average rank busy ~(n+1)/2 of n steps; we charge the ring the same 0.5x
+# causal factor as the bulk schedules per step (the lock-step pessimistic
+# bound would be 1.0x — an async ring with slack amortises the straggler;
+# see EXPERIMENTS.md §Attention-schedules).
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionScheduleDecision:
+    """Outcome of the three-way attention-schedule decision."""
+    schedule: str                  # "bulk" | "ulysses" | "ring"
+    times_s: dict[str, float]      # schedule -> predicted seconds/layer
+    bulk_s: float
+    chosen_s: float
+    comm_s: float                  # comm on the chosen schedule's crit path
+    flash_s: float                 # attention compute (chosen schedule)
+
+    @property
+    def predicted_speedup(self) -> float:
+        if self.chosen_s <= 0:
+            return 1.0
+        return self.bulk_s / self.chosen_s
+
+
+def attention_flash_step_s(batch: int, s_local: int, heads: int,
+                           head_dim: int,
+                           hw: HardwareModel = DEFAULT_HW) -> float:
+    """Seconds for ONE q-block x kv-block flash step (all heads, local
+    sequence) — the unit every schedule's compute term is built from."""
+    return (4.0 * batch * float(s_local) ** 2 * heads * head_dim
+            / hw.peak_flops)
+
+
+def attention_schedule_times(batch: int, s_local: int, heads: int,
+                             kv_heads: int, head_dim: int, d_model: int,
+                             axis_size: int, *, dtype_bytes: int = 2,
+                             causal: bool = True,
+                             hw: HardwareModel = DEFAULT_HW
+                             ) -> dict[str, float]:
+    """Predicted seconds per attention call for each schedule (comm on the
+    critical path + attention flops; shared projection flops excluded)."""
+    n = max(1, axis_size)
+    cf = 0.5 if causal else 1.0
+    flash_step = attention_flash_step_s(batch, s_local, heads, head_dim, hw)
+    attn_full = cf * n * flash_step          # full-seq flash == n ring steps
+
+    x_shard = batch * s_local * d_model * dtype_bytes
+    t_bulk = (ring_all_gather_time(x_shard, n, hw)
+              + ring_reduce_scatter_time(x_shard * n, n, hw)
+              + attn_full)
+
+    wq_shard = d_model * (heads * head_dim // n) * dtype_bytes
+    w_gather = 2.0 * ring_all_gather_time(wq_shard, n, hw)   # wq and wo
+    qo_local = batch * s_local * heads * head_dim * dtype_bytes
+    kv_shard = 2.0 * batch * s_local * kv_heads * head_dim * dtype_bytes
+    t_ulysses = (w_gather + 2.0 * all_to_all_time(qo_local, n, hw)
+                 + ring_all_gather_time(kv_shard, n, hw) + attn_full)
+
+    link_step = hw.alpha_s + kv_shard / hw.link_bw
+    t_ring = (w_gather + cf * flash_step
+              + (n - 1) * max(cf * flash_step, link_step))
+    return {"bulk": t_bulk, "ulysses": t_ulysses, "ring": t_ring}
+
+
+def decide_attention_schedule(batch: int, s_local: int, heads: int,
+                              kv_heads: int, head_dim: int, d_model: int,
+                              axis_size: int, *, dtype_bytes: int = 2,
+                              causal: bool = True,
+                              hw: HardwareModel = DEFAULT_HW,
+                              force_schedule: str | None = None
+                              ) -> AttentionScheduleDecision:
+    """Pick the attention schedule for one call site.  ``force_schedule``
+    pins the choice (an MDMPConfig bulk override, or the tuner's measured
+    winner) while still reporting the modeled times."""
+    times = attention_schedule_times(
+        batch, s_local, heads, kv_heads, head_dim, d_model, axis_size,
+        dtype_bytes=dtype_bytes, causal=causal, hw=hw)
+    if force_schedule is not None:
+        assert force_schedule in times, force_schedule
+        best = force_schedule
+    else:
+        best = min(times, key=lambda s: (times[s], s))
+    n = max(1, axis_size)
+    cf = 0.5 if causal else 1.0
+    flash_s = cf * n * attention_flash_step_s(batch, s_local, heads,
+                                              head_dim, hw)
+    comm_s = max(0.0, times[best] - flash_s)
+    return AttentionScheduleDecision(
+        schedule=best, times_s=times, bulk_s=times["bulk"],
+        chosen_s=times[best], comm_s=comm_s, flash_s=flash_s)
+
+
+# ---------------------------------------------------------------------------
 # Roofline terms (used by benchmarks/roofline.py on dry-run artifacts)
 # ---------------------------------------------------------------------------
 

@@ -324,16 +324,28 @@ def managed_all_reduce(x: Array, axis_name: str, *, mode: str | None = None,
                        chunks: int | None = None) -> Array:
     """Sum ``x`` across ``axis_name`` (all ranks receive the sum).
     The ring path composes the custom-VJP'd RS/AG, so its transpose is a
-    flat-memory ring as well."""
+    flat-memory ring as well.  A non-divisible leading axis no longer
+    silently demotes a forced ring to ``lax.psum``: the operand is
+    zero-padded to a multiple of the axis size and sliced back after the
+    AG (exact — the pad rows reduce to zero).  The one remaining psum
+    fallback (0-d operands) is logged as ``mode='bulk'`` in the
+    DecisionRecord so the audit trail shows the demotion."""
     n = _axis_size(axis_name)
     if n == 1:
         return x
-    eff_mode, c = _resolve("all_reduce", axis_name, x, mode, chunks,
-                           "all_reduce")
-    if eff_mode == "bulk" or x.ndim == 0 or x.shape[0] % n != 0:
+    scalar = x.ndim == 0
+    eff_mode, c = _resolve("all_reduce", axis_name, x,
+                           "bulk" if scalar else mode, chunks, "all_reduce")
+    if eff_mode == "bulk" or scalar:
         return lax.psum(x, axis_name)
+    rows = x.shape[0]
+    if rows % n != 0:
+        pad = n - rows % n
+        x = jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
     scattered = managed_reduce_scatter(x, axis_name, eff_mode, c)
-    return managed_all_gather(scattered, axis_name, eff_mode, c)
+    full = managed_all_gather(scattered, axis_name, eff_mode, c)
+    return full[:rows] if rows != full.shape[0] else full
 
 
 # ---------------------------------------------------------------------------
@@ -653,6 +665,232 @@ def _mmrs_bwd(axis_name, mode, chunks, precision, res, dy):
 
 
 matmul_reduce_scatter.defvjp(_mmrs_fwd, _mmrs_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Managed ring attention (context parallelism)
+#
+# The paper's Figure-3 strategy mapped onto attention: q stays sequence-
+# sharded, KV blocks rotate around the ring via ppermute while the flash
+# kernel consumes the block that already arrived, merging partials with the
+# online-softmax (m, l, acc) carry.  Activation memory is O(S_loc); the
+# per-step transfer hides under the per-block flash once compute dominates
+# the link.  ``mode='bulk'`` is the oracle: all-gather the KV and run ONE
+# flash call (identical math, bulk communication).  Causal masks skip
+# fully-masked future blocks (lax.cond per step — the permute stays
+# outside the cond so every rank still participates in the collective).
+#
+# The custom VJP re-streams the backward ring: dq accumulates locally as
+# KV blocks pass by again, while each block's (dk, dv) accumulator rotates
+# WITH it, collecting every rank's contribution before arriving back home
+# after a full cycle.  Residuals are only (q, k, v, out, lse) — O(S_loc),
+# never the gathered sequence.
+# ---------------------------------------------------------------------------
+
+
+def _block_visible(q_off, k_off, sq: int, skv: int, causal: bool,
+                   window: int):
+    """Whether ANY (qpos, kpos) pair of the block survives the mask.
+    Offsets may be traced (ring ranks derive them from axis_index)."""
+    vis = jnp.bool_(True)
+    if causal:
+        vis &= k_off <= q_off + sq - 1
+    if window > 0:
+        vis &= (q_off - (k_off + skv - 1)) < window
+    return vis
+
+
+def _ring_attn_resolve(q, k, axis_name, causal, mode):
+    n = _axis_size(axis_name)
+    b, s_loc, h, hd = q.shape
+    compute_s = ((0.5 if causal else 1.0) * n
+                 * cost_model.attention_flash_step_s(
+                     b, s_loc, h, hd, get_config().hw))
+    eff_mode, _ = _resolve("ring_attention", axis_name, k, mode, None,
+                           "all_gather", compute_time_s=compute_s)
+    return eff_mode, n
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def managed_ring_attention(q: Array, k: Array, v: Array, axis_name: str,
+                           causal: bool = True, window: int = 0,
+                           mode: str | None = None) -> Array:
+    """Sequence-sharded attention with KV streamed around ``axis_name``.
+
+    q: [B, S_loc, H, hd]; k, v: [B, S_loc, KV, hd] — every rank holds its
+    own sequence block of q AND kv (GQA via head grouping, KV <= H).
+    Global positions are rank-derived: q[0] sits at ``axis_index * S_loc``.
+    Returns [B, S_loc, H, hd] in q's dtype, allclose to flash attention
+    over the all-gathered KV (the ``mode='bulk'`` fallback).
+    """
+    out, _ = _ring_attention_fwd_impl(q, k, v, axis_name, causal, window,
+                                      mode)
+    return out
+
+
+def _ring_attention_fwd_impl(q, k, v, axis_name, causal, window, mode):
+    from repro.kernels import ops as kernel_ops
+    from repro.kernels.flash_attention import finalize_partials
+    b, s_loc, h, hd = q.shape
+    eff_mode, n = _ring_attn_resolve(q, k, axis_name, causal, mode)
+    if n == 1:
+        carry = kernel_ops.flash_attention_step(q, k, v, causal=causal,
+                                                window=window)
+        out, lse = finalize_partials(*carry, out_dtype=q.dtype)
+        return out, lse
+    idx = lax.axis_index(axis_name)
+    # Positions only matter under a mask; keeping q_off literal 0 otherwise
+    # avoids a dead axis_index chain in the bulk branch (XLA's SPMD
+    # partitioner rejects a partition-id it cannot place).
+    q_off = idx * s_loc if (causal or window > 0) else 0
+
+    if eff_mode == "bulk":
+        kg = lax.all_gather(k, axis_name, axis=1, tiled=True)
+        vg = lax.all_gather(v, axis_name, axis=1, tiled=True)
+        carry = kernel_ops.flash_attention_step(
+            q, kg, vg, causal=causal, window=window, q_offset=q_off,
+            k_offset=0)
+        out, lse = finalize_partials(*carry, out_dtype=q.dtype)
+        return out, lse
+
+    perm = _ring_perm(n)
+    from repro.kernels.flash_attention import init_partials
+    m0, l0, acc0 = init_partials(b, s_loc, h, hd)
+
+    def attend_block(carry, kb, vb, k_off):
+        mc, lc, ac = carry
+        return lax.cond(
+            _block_visible(q_off, k_off, s_loc, s_loc, causal, window),
+            lambda op: kernel_ops.flash_attention_step(
+                q, op[3], op[4], (op[0], op[1], op[2]), causal=causal,
+                window=window, q_offset=q_off, k_offset=k_off),
+            lambda op: (op[0], op[1], op[2]),
+            (mc, lc, ac, kb, vb))
+
+    def body(s, carry):
+        mc, lc, ac, kb, vb = carry
+        # issue the permute FIRST: the transfer of block s+1 overlaps the
+        # flash consuming block s (the MDMP intermingling).
+        kb_next = lax.ppermute(kb, axis_name, perm)
+        vb_next = lax.ppermute(vb, axis_name, perm)
+        src = jnp.mod(idx - s, n)
+        mc, lc, ac = attend_block((mc, lc, ac), kb, vb, src * s_loc)
+        return mc, lc, ac, kb_next, vb_next
+
+    mc, lc, ac, kb, vb = lax.fori_loop(0, n - 1, body,
+                                       (m0, l0, acc0, k, v))
+    src = jnp.mod(idx - (n - 1), n)
+    mc, lc, ac = attend_block((mc, lc, ac), kb, vb, src * s_loc)
+    out, lse = finalize_partials(mc, lc, ac, out_dtype=q.dtype)
+    return out, lse
+
+
+def _ring_attn_fwd(q, k, v, axis_name, causal, window, mode):
+    out, lse = _ring_attention_fwd_impl(q, k, v, axis_name, causal, window,
+                                        mode)
+    return out, (q, k, v, out, lse)
+
+
+def _ring_attn_bwd(axis_name, causal, window, mode, res, dy):
+    from repro.kernels import ops as kernel_ops
+    q, k, v, out, lse = res
+    b, s_loc, h, hd = q.shape
+    eff_mode, n = _ring_attn_resolve(q, k, axis_name, causal, mode)
+    dsum = jnp.sum(dy.astype(jnp.float32) * out.astype(jnp.float32),
+                   axis=-1)
+
+    if n == 1:
+        dq, dk, dv = kernel_ops.flash_attention_bwd_block(
+            q, k, v, dy, lse, dsum, causal=causal, window=window)
+        return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+    idx = lax.axis_index(axis_name)
+    q_off = idx * s_loc if (causal or window > 0) else 0
+
+    if eff_mode == "bulk":
+        kg = lax.all_gather(k, axis_name, axis=1, tiled=True)
+        vg = lax.all_gather(v, axis_name, axis=1, tiled=True)
+        dq, dk_full, dv_full = kernel_ops.flash_attention_bwd_block(
+            q, kg, vg, dy, lse, dsum, causal=causal, window=window,
+            q_offset=q_off, k_offset=0)
+        # each rank computed its q-rows' contribution to EVERY kv position;
+        # the transpose of the seq all-gather sums + scatters them home
+        dk = lax.psum_scatter(dk_full, axis_name, scatter_dimension=1,
+                              tiled=True)
+        dv = lax.psum_scatter(dv_full, axis_name, scatter_dimension=1,
+                              tiled=True)
+        return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+    perm = _ring_perm(n)
+
+    def bwd_block(carry, s):
+        dq, kb, vb, dkb, dvb = carry
+        src = jnp.mod(idx - s, n)
+        k_off = src * s_loc
+
+        def compute(op):
+            dq_c, kb_c, vb_c, dkb_c, dvb_c = op
+            dq_i, dk_i, dv_i = kernel_ops.flash_attention_bwd_block(
+                q, kb_c, vb_c, dy, lse, dsum, causal=causal, window=window,
+                q_offset=q_off, k_offset=k_off)
+            return dq_c + dq_i, kb_c, vb_c, dkb_c + dk_i, dvb_c + dv_i
+
+        return lax.cond(
+            _block_visible(q_off, k_off, s_loc, s_loc, causal, window),
+            compute, lambda op: op, (dq, kb, vb, dkb, dvb))
+
+    def body(s, carry):
+        carry = bwd_block(carry, s)
+        dq, kb, vb, dkb, dvb = carry
+        # (dk, dv) accumulators travel WITH their block: after the full
+        # cycle every rank has contributed and the sums are back home.
+        kb = lax.ppermute(kb, axis_name, perm)
+        vb = lax.ppermute(vb, axis_name, perm)
+        dkb = lax.ppermute(dkb, axis_name, perm)
+        dvb = lax.ppermute(dvb, axis_name, perm)
+        return dq, kb, vb, dkb, dvb
+
+    init = (jnp.zeros(q.shape, jnp.float32), k, v,
+            jnp.zeros(k.shape, jnp.float32), jnp.zeros(v.shape, jnp.float32))
+    dq, _, _, dk, dv = lax.fori_loop(0, n, body, init)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+managed_ring_attention.defvjp(_ring_attn_fwd, _ring_attn_bwd)
+
+
+def resolve_attention_schedule(axis_name: str, axis_size: int, batch: int,
+                               s_local: int, heads: int, kv_heads: int,
+                               head_dim: int, d_model: int, *,
+                               dtype_bytes: int = 2, causal: bool = True,
+                               mode: str | None = None,
+                               schedule: str | None = None
+                               ) -> cost_model.AttentionScheduleDecision:
+    """The managed-runtime entry for the three-way attention schedule
+    (bulk sequence-gather vs ulysses a2a vs ring streaming) — the analogue
+    of ``resolve_halo_aggregation`` for the transformer path.  Called at
+    trace/plan time with static shapes; the chosen schedule feeds
+    ``models/attention.py`` dispatch and lands in the decision log.
+
+    ``mode='bulk'`` pins the paper-faithful unmanaged baseline;
+    ``mode='interleaved'`` pins the always-stream schedule (ring);
+    ``schedule`` pins an explicit choice (the tuner's measured winner).
+    """
+    cfg = get_config()
+    eff_mode = mode or cfg.mode
+    force = {"bulk": "bulk", "interleaved": "ring"}.get(eff_mode, schedule)
+    decision = cost_model.decide_attention_schedule(
+        batch, s_local, heads, kv_heads, head_dim, d_model, axis_size,
+        dtype_bytes=dtype_bytes, causal=causal, hw=cfg.hw,
+        force_schedule=force)
+    if cfg.log_decisions:
+        _DECISION_LOG.append(DecisionRecord(
+            op="attention_schedule", axis=axis_name,
+            nbytes=2 * batch * s_local * kv_heads * head_dim * dtype_bytes,
+            mode=decision.schedule, chunks=max(1, axis_size),
+            predicted_bulk_s=decision.bulk_s,
+            predicted_interleaved_s=decision.chosen_s))
+    return decision
 
 
 # ---------------------------------------------------------------------------

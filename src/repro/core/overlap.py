@@ -133,34 +133,43 @@ def bucketed_all_reduce(grads: Any, axis_name: str, *,
     each bucket with one collective.  bucket_bytes=inf reproduces the
     single-bulk-message baseline; small buckets approach the paper's
     fine-grained per-datum messaging.  Used by the benchmark harness to
-    sweep the aggregation/overlap trade-off."""
+    sweep the aggregation/overlap trade-off.
+
+    Buckets are formed PER DTYPE: concatenating a mixed tree in the first
+    leaf's dtype would silently downcast (e.g. f32 grads squeezed through
+    bf16 when a bf16 leaf happens to come first) — each dtype group keeps
+    its exact dtype end to end."""
     leaves, treedef = jax.tree.flatten(grads)
     if not leaves:
         return grads
-    dtype = leaves[0].dtype
-    flat = [jnp.ravel(l).astype(dtype) for l in leaves]
-    sizes = [f.size for f in flat]
-    concat = jnp.concatenate(flat) if len(flat) > 1 else flat[0]
 
-    itemsize = concat.dtype.itemsize
-    per_bucket = max(1, int(bucket_bytes // itemsize))
-    total = concat.size
-    reduced_parts = []
-    start = 0
-    while start < total:
-        stop = min(start + per_bucket, total)
-        part = lax.slice_in_dim(concat, start, stop, axis=0)
-        reduced_parts.append(managed_all_reduce(part, axis_name, mode=mode))
-        start = stop
-    red = (jnp.concatenate(reduced_parts)
-           if len(reduced_parts) > 1 else reduced_parts[0])
+    groups: dict[Any, list[int]] = {}
+    for i, leaf in enumerate(leaves):
+        groups.setdefault(jnp.dtype(leaf.dtype), []).append(i)
 
-    out_leaves = []
-    off = 0
-    for leaf, size in zip(leaves, sizes):
-        out_leaves.append(red[off:off + size].reshape(leaf.shape)
-                          .astype(leaf.dtype))
-        off += size
+    out_leaves: list[Any] = [None] * len(leaves)
+    for dtype, idxs in groups.items():
+        flat = [jnp.ravel(leaves[i]) for i in idxs]
+        sizes = [f.size for f in flat]
+        concat = jnp.concatenate(flat) if len(flat) > 1 else flat[0]
+
+        per_bucket = max(1, int(bucket_bytes // dtype.itemsize))
+        total = concat.size
+        reduced_parts = []
+        start = 0
+        while start < total:
+            stop = min(start + per_bucket, total)
+            part = lax.slice_in_dim(concat, start, stop, axis=0)
+            reduced_parts.append(managed_all_reduce(part, axis_name,
+                                                    mode=mode))
+            start = stop
+        red = (jnp.concatenate(reduced_parts)
+               if len(reduced_parts) > 1 else reduced_parts[0])
+
+        off = 0
+        for i, size in zip(idxs, sizes):
+            out_leaves[i] = red[off:off + size].reshape(leaves[i].shape)
+            off += size
     return jax.tree.unflatten(treedef, out_leaves)
 
 

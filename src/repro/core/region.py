@@ -68,6 +68,13 @@ class Plan:
         in the chunks slot."""
         return self.entries[label].chunks
 
+    def schedule_for(self, label: str) -> str:
+        """Schedule chosen for an attention declaration ("bulk" |
+        "ulysses" | "ring").  Alias of ``mode_for`` — the schedule name
+        rides in the mode slot; feed it to models/attention.py dispatch
+        (or ``cfg.attn_impl``, mapping "bulk" -> "megatron")."""
+        return self.entries[label].mode
+
     def summary(self) -> str:
         lines = [f"MDMP plan ({self.total_eqns} eqns in region):"]
         for e in self.entries.values():
@@ -132,6 +139,22 @@ class CommRegion:
                                     nbytes=nbytes, collective="halo",
                                     shape=(int(rows_local), int(cols))))
 
+    def attention(self, label: str, *, axis: str, batch: int, s_local: int,
+                  heads: int, kv_heads: int, head_dim: int, d_model: int,
+                  dtype, causal: bool = True) -> None:
+        """Declare an SP attention call site (q sequence-sharded over
+        ``axis``).  Planning runs the three-way schedule decision for it:
+        the resulting PlanEntry's ``mode`` is the chosen schedule ("bulk" |
+        "ulysses" | "ring"), read back via ``plan.schedule_for(label)``."""
+        import numpy as np
+        ib = np.dtype(dtype).itemsize
+        nbytes = 2 * batch * s_local * kv_heads * head_dim * ib  # kv block
+        self._specs.append(CommSpec(
+            label=label, kind="attention", axis=axis, nbytes=nbytes,
+            collective="attention",
+            shape=(int(batch), int(s_local), int(heads), int(kv_heads),
+                   int(head_dim), int(d_model), int(causal), int(ib))))
+
     # -- planning -----------------------------------------------------------
 
     def plan(self, fn: Callable, *example_args: Any,
@@ -165,6 +188,23 @@ class CommRegion:
                     spec=spec, mode=d.mode, chunks=d.k, overlap_budget=1.0,
                     predicted_bulk_s=d.bulk_sweep_s,
                     predicted_interleaved_s=d.aggregated_sweep_s)
+                continue
+            if spec.kind == "attention":
+                # The schedule knob: bulk gather vs ulysses a2a vs ring
+                # streaming, routed through the managed runtime so the
+                # choice lands in the MDMP decision log.
+                (batch, s_local, heads, kv_heads, head_dim, d_model,
+                 causal, ib) = spec.shape
+                n = self.axis_sizes.get(spec.axis, 1)
+                with managed.use_config(self.config):
+                    d = managed.resolve_attention_schedule(
+                        spec.axis, n, batch, s_local, heads, kv_heads,
+                        head_dim, d_model, dtype_bytes=ib,
+                        causal=bool(causal))
+                entries[spec.label] = PlanEntry(
+                    spec=spec, mode=d.schedule, chunks=1,
+                    overlap_budget=1.0, predicted_bulk_s=d.bulk_s,
+                    predicted_interleaved_s=d.chosen_s)
                 continue
             budget = (report.overlap_budget(spec.label)
                       if spec.label in report.records else 1.0)

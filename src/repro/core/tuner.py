@@ -58,6 +58,10 @@ class ScheduleTuner:
     HALO_CANDIDATES = (("bulk", 1), ("aggregated", 2), ("aggregated", 4),
                        ("aggregated", 8))
 
+    #: candidate schedules for attention call sites — ``mode`` carries the
+    #: schedule name (bulk sequence-gather / ulysses a2a / ring streaming)
+    ATTENTION_CANDIDATES = (("bulk", 1), ("ulysses", 1), ("ring", 1))
+
     def __init__(self, hw: HardwareModel = TPU_V5E,
                  path: str | None = None):
         self.hw = hw
@@ -103,6 +107,31 @@ class ScheduleTuner:
             self._entries[key] = entry
         return entry
 
+    def decide_attention(self, axis: str, axis_size: int, batch: int,
+                         s_local: int, heads: int, kv_heads: int,
+                         head_dim: int, d_model: int, *,
+                         dtype_str: str = "bfloat16", dtype_bytes: int = 2,
+                         causal: bool = True) -> TunerEntry:
+        """Schedule decision for an SP attention call site: seeded from the
+        three-way cost model (``mode`` carries the schedule name, chunks is
+        unused), then overridden by measurements fed back through
+        ``record(key, "ring", 1, seconds)`` etc.  Persisted like every
+        other entry so a measured winner survives restarts."""
+        key = call_site_key(
+            "attention_sp", (batch, s_local, heads, kv_heads, head_dim,
+                             d_model, int(causal)), dtype_str, axis,
+            axis_size)
+        entry = self._entries.get(key)
+        if entry is None:
+            d = cost_model.decide_attention_schedule(
+                batch, s_local, heads, kv_heads, head_dim, d_model,
+                axis_size, dtype_bytes=dtype_bytes, causal=causal,
+                hw=self.hw)
+            entry = TunerEntry(key=key, mode=d.schedule, chunks=1,
+                               predicted_s=d.chosen_s)
+            self._entries[key] = entry
+        return entry
+
     # -- measurement feedback (iteration k informs iteration k+1) -----------
 
     def record(self, key: str, mode: str, chunks: int,
@@ -129,6 +158,8 @@ class ScheduleTuner:
         runtime'), or None when the sweep is complete.  Halo call sites
         sweep the aggregation factors instead of the chunk counts."""
         candidates = (self.HALO_CANDIDATES if key.startswith("halo")
+                      else self.ATTENTION_CANDIDATES
+                      if key.startswith("attention")
                       else self.CANDIDATES)
         entry = self._entries.get(key)
         if entry is None:

@@ -21,7 +21,10 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.kernels import ref
-from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention import (finalize_partials,  # noqa: F401
+                                           flash_attention_carry_pallas,
+                                           flash_attention_pallas,
+                                           init_partials, merge_partials)
 from repro.kernels.stencil import jacobi_step_pallas  # noqa: F401 (re-export)
 
 Array = jax.Array
@@ -242,6 +245,163 @@ def _flash_bwd_blockwise(q, k, v, out, lse, dout, causal, window, q_offset,
     dk = dk[:, :skv_valid].astype(k.dtype)
     dv = dv[:, :skv_valid].astype(v.dtype)
     return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Streamed flash steps (ring attention) — carry in/out, traced offsets
+# ---------------------------------------------------------------------------
+
+
+def _step_mask(sq, blk, ki, q_offset, k_offset, skv_valid, causal, window):
+    """Mask for one kv sub-block when BOTH q and k sit at global offsets
+    (which may be traced scalars — ring ranks derive them from
+    lax.axis_index).  ``skv_valid`` masks the zero-padding of ragged kv."""
+    qpos = q_offset + jnp.arange(sq)
+    kloc = ki * blk + jnp.arange(blk)
+    kpos = k_offset + kloc
+    mask = jnp.broadcast_to((kloc < skv_valid)[None, :], (sq, blk))
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    return mask
+
+
+def _to_grouped(x, kvh, groups):
+    """[B, Sq, H(, hd)] -> [b, kvh, g, sq(, hd)] (internal GQA layout)."""
+    b, sq = x.shape[:2]
+    if x.ndim == 3:
+        return x.reshape(b, sq, kvh, groups).transpose(0, 2, 3, 1)
+    hd = x.shape[-1]
+    return x.reshape(b, sq, kvh, groups, hd).transpose(0, 2, 3, 1, 4)
+
+
+def _from_grouped(x):
+    """[b, kvh, g, sq(, hd)] -> [B, Sq, H(, hd)]."""
+    b, kvh, g, sq = x.shape[:4]
+    if x.ndim == 4:
+        return x.transpose(0, 3, 1, 2).reshape(b, sq, kvh * g)
+    return x.transpose(0, 3, 1, 2, 4).reshape(b, sq, kvh * g, x.shape[-1])
+
+
+def _flash_step_jnp(q, k, v, m, l, acc, causal, window, q_offset, k_offset,
+                    blk_kv):
+    """Pure-jnp carry step (lax.scan over kv sub-blocks) — the attend_ref-
+    family engine behind flash_attention_step where Pallas can't lower."""
+    b, sq, h, hd = q.shape
+    k, v, skv_valid = _pad_kv(k, v, min(blk_kv, k.shape[1]))
+    skv = k.shape[1]
+    blk = min(blk_kv, skv)
+    nk = skv // blk
+    kvh = k.shape[2]
+    groups = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qf = _to_grouped(q.astype(jnp.float32) * scale, kvh, groups)
+
+    mi = _to_grouped(m, kvh, groups)
+    li = _to_grouped(l, kvh, groups)
+    ai = _to_grouped(acc, kvh, groups)
+
+    def body(carry, ki):
+        mc, lc, ac = carry
+        ks = lax.dynamic_slice_in_dim(k, ki * blk, blk, axis=1)
+        vs = lax.dynamic_slice_in_dim(v, ki * blk, blk, axis=1)
+        logits = jnp.einsum("bkgqd,bskd->bkgqs", qf,
+                            ks.astype(jnp.float32))
+        mask = _step_mask(sq, blk, ki, q_offset, k_offset, skv_valid,
+                          causal, window)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_cur = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(mc, m_cur)
+        alpha = jnp.exp(mc - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        l_new = alpha * lc + jnp.sum(p, axis=-1)
+        a_new = ac * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vs.astype(jnp.float32))
+        return (m_new, l_new, a_new), None
+
+    (mi, li, ai), _ = lax.scan(body, (mi, li, ai), jnp.arange(nk))
+    return _from_grouped(mi), _from_grouped(li), _from_grouped(ai)
+
+
+def flash_attention_step(q: Array, k: Array, v: Array,
+                         carry: tuple[Array, Array, Array] | None = None, *,
+                         causal: bool = True, window: int = 0,
+                         q_offset=0, k_offset=0, blk_q: int = 128,
+                         blk_kv: int = 128) -> tuple[Array, Array, Array]:
+    """Fold one KV block into an online-softmax carry (m, l, acc — the
+    public [B, Sq, H(, hd)] layout of kernels/flash_attention.py).
+
+    This is the per-arrival work item of ring attention: each ring step
+    calls it on the KV block that just landed while the next block is in
+    flight.  ``q_offset``/``k_offset`` may be traced int32 scalars.
+    Dispatch mirrors ``flash_attention``: Pallas carry kernel on TPU (or
+    REPRO_PALLAS=interpret), jnp blockwise scan elsewhere."""
+    b, sq, h, hd = q.shape
+    if carry is None:
+        carry = init_partials(b, sq, h, hd)
+    m, l, acc = carry
+    mode = _pallas_mode()
+    skv = k.shape[1]
+    if mode in ("on", "interpret") and sq % min(blk_q, sq) == 0 \
+            and skv % min(blk_kv, skv) == 0:
+        return flash_attention_carry_pallas(
+            q, k, v, m, l, acc, causal=causal, window=window,
+            q_offset=q_offset, k_offset=k_offset, blk_q=blk_q,
+            blk_kv=blk_kv, interpret=(mode == "interpret"))
+    return _flash_step_jnp(q, k, v, m, l, acc, causal, window, q_offset,
+                           k_offset, max(blk_kv, 512))
+
+
+def flash_attention_bwd_block(q: Array, k: Array, v: Array, dout: Array,
+                              lse: Array, dsum: Array, *, causal: bool,
+                              window: int = 0, q_offset=0, k_offset=0,
+                              blk_kv: int = 512
+                              ) -> tuple[Array, Array, Array]:
+    """Backward of one streamed flash step, recomputing p from (q, k, lse).
+
+    q, dout: [B, Sq, H, hd]; k, v: [B, Skv, KV, hd];
+    lse, dsum: [B, Sq, H] (dsum = sum(dout * out, -1), computed once by the
+    caller — it is block-independent).  Returns f32 (dq_contrib, dk, dv) so
+    ring ranks can accumulate across steps without dtype round-trips.
+    Offsets may be traced; memory stays O(Sq * blk) via the inner scan."""
+    b, sq, h, hd = q.shape
+    k, v, skv_valid = _pad_kv(k, v, min(blk_kv, k.shape[1]))
+    skv = k.shape[1]
+    blk = min(blk_kv, skv)
+    nk = skv // blk
+    kvh = k.shape[2]
+    groups = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qf = _to_grouped(q.astype(jnp.float32), kvh, groups)
+    do = _to_grouped(dout.astype(jnp.float32), kvh, groups)
+    lse_g = _to_grouped(lse, kvh, groups)
+    dsum_g = _to_grouped(dsum, kvh, groups)
+
+    def body(dq_acc, ki):
+        ks = lax.dynamic_slice_in_dim(k, ki * blk, blk, axis=1) \
+            .astype(jnp.float32)
+        vs = lax.dynamic_slice_in_dim(v, ki * blk, blk, axis=1) \
+            .astype(jnp.float32)
+        logits = jnp.einsum("bkgqd,bskd->bkgqs", qf * scale, ks)
+        mask = _step_mask(sq, blk, ki, q_offset, k_offset, skv_valid,
+                          causal, window)
+        p = jnp.where(mask[None, None, None],
+                      jnp.exp(logits - lse_g[..., None]), 0.0)
+        dv_blk = jnp.einsum("bkgqs,bkgqd->bskd", p, do)
+        dp = jnp.einsum("bkgqd,bskd->bkgqs", do, vs)
+        ds = p * (dp - dsum_g[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bkgqs,bskd->bkgqd", ds, ks)
+        dk_blk = jnp.einsum("bkgqs,bkgqd->bskd", ds, qf)
+        return dq_acc, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((b, kvh, groups, sq, hd), jnp.float32)
+    dq, (dk_blks, dv_blks) = lax.scan(body, dq0, jnp.arange(nk))
+    dq = _from_grouped(dq)
+    dk = dk_blks.transpose(1, 0, 2, 3, 4).reshape(b, skv, kvh, hd)
+    dv = dv_blks.transpose(1, 0, 2, 3, 4).reshape(b, skv, kvh, hd)
+    return dq, dk[:, :skv_valid], dv[:, :skv_valid]
 
 
 def flash_attention_blockwise(q: Array, k: Array, v: Array, *,

@@ -231,6 +231,76 @@ def attention_sp_ulysses(x: Array, params: dict, cfg: ModelConfig,
     return y
 
 
+def attention_sp_ring(x: Array, params: dict, cfg: ModelConfig,
+                      ctx: MeshCtx, *, causal: bool = True,
+                      window: int = 0, return_kv: bool = False) -> Any:
+    """Ring attention / context parallelism (MDMP Figure-3 on the
+    transformer path): q stays sequence-sharded with FULL heads, KV blocks
+    stream around 'model' via the managed ring collective while the flash
+    kernel consumes the block that already arrived — O(S_loc) activation
+    memory vs the O(S) gathers of attention_sp / attention_sp_ulysses.
+
+    Projections mirror ulysses (weights gathered over 'model', bytes ∝
+    D·H·hd) but NO head<->seq switch is needed: every rank keeps all heads
+    on its own sequence block, so GQA needs no kv slicing — the flash
+    head-grouping consumes all KVp heads directly.  Numerically identical
+    to attention_sp (tests assert it)."""
+    b, s_loc, d = x.shape
+    hp = cfg.padded_heads
+    kvh = padded_kv_heads(cfg)
+    hd = cfg.head_dim
+
+    wq = fsdp_gather(params["w_q"], "data", mode=ctx.mdmp_mode)
+    wq = fsdp_gather(wq, "model", axis=1, mode=ctx.mdmp_mode)  # [D, H*hd]
+    wkv = fsdp_gather(params["w_kv"], "data", mode=ctx.mdmp_mode)
+    wo = fsdp_gather(params["w_o"], "data", axis=1, mode=ctx.mdmp_mode)
+    wo = fsdp_gather(wo, "model", axis=0, mode=ctx.mdmp_mode)  # [H*hd, D]
+
+    q = jnp.dot(x, wq).reshape(b, s_loc, hp, hd)
+    kv = jnp.dot(x, wkv)
+    k, v = jnp.split(kv, 2, axis=-1)
+    k = k.reshape(b, s_loc, kvh, hd)
+    v = v.reshape(b, s_loc, kvh, hd)
+
+    if cfg.rope_theta > 0:
+        pos = lax.axis_index("model") * s_loc + jnp.arange(s_loc)
+        q = layers.apply_rope(q, pos, cfg.rope_theta)
+        k = layers.apply_rope(k, pos, cfg.rope_theta)
+
+    o = managed.managed_ring_attention(q, k, v, "model", causal, window,
+                                       ctx.mdmp_mode)
+    y = jnp.dot(o.reshape(b, s_loc, hp * hd), wo).astype(x.dtype)
+    if return_kv:
+        return y, (k, v)   # this rank's seq slice, all kv heads (decode
+    return y               # needs every head — same contract as ulysses)
+
+
+#: schedule name (cost model / tuner / plan) -> SP attention implementation
+SP_SCHEDULES = {
+    "bulk": attention_sp,          # megatron AG-matmul rings
+    "ulysses": attention_sp_ulysses,
+    "ring": attention_sp_ring,
+}
+
+
+def attention_sp_auto(x: Array, params: dict, cfg: ModelConfig,
+                      ctx: MeshCtx, *, causal: bool = True,
+                      window: int = 0, return_kv: bool = False) -> Any:
+    """The managed dispatcher (cfg.attn_impl='auto'): pick bulk gather vs
+    ulysses a2a vs ring streaming per call site from the cost model, log
+    the DecisionRecord, and run the winner.  Shapes are static at trace
+    time, so the decision costs nothing at runtime."""
+    b, s_loc, _ = x.shape
+    decision = managed.resolve_attention_schedule(
+        "model", ctx.tp, b, s_loc, cfg.padded_heads, padded_kv_heads(cfg),
+        cfg.head_dim, cfg.d_model,
+        dtype_bytes=jnp.dtype(cfg.dtype).itemsize, causal=causal,
+        mode=ctx.mdmp_mode)
+    fn = SP_SCHEDULES[decision.schedule]
+    return fn(x, params, cfg, ctx, causal=causal, window=window,
+              return_kv=return_kv)
+
+
 # ---------------------------------------------------------------------------
 # Decode flow
 # ---------------------------------------------------------------------------

@@ -45,8 +45,11 @@ def block_sp(x: Array, p: dict, cfg: ModelConfig, ctx: MeshCtx, *,
             y = ssm.mamba_mixer_sp(h, p, cfg, ctx)
         return x + y, aux, kv, sstate
 
-    attn_fn = (attention.attention_sp_ulysses
-               if cfg.attn_impl == "ulysses" else attention.attention_sp)
+    attn_fn = {
+        "ulysses": attention.attention_sp_ulysses,
+        "ring": attention.attention_sp_ring,
+        "auto": attention.attention_sp_auto,   # cost-model-chosen schedule
+    }.get(cfg.attn_impl, attention.attention_sp)
     h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
     if cfg.family == "hybrid":
         att = attn_fn(h, p, cfg, ctx, causal=causal,

@@ -134,6 +134,58 @@ def test_ring_grads_match_bulk(mesh8, data, mode):
     np.testing.assert_allclose(gwa, gwb, rtol=1e-4, atol=1e-4)
 
 
+def test_all_reduce_ring_non_divisible(mesh8):
+    """Forced ring mode is honored when axis 0 isn't divisible by the axis
+    size: pad-and-slice, not a silent lax.psum demotion.  The decision log
+    must show the interleaved schedule actually ran."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(5, 3)).astype(np.float32))
+    managed.clear_decision_log()
+    out = run(mesh8,
+              lambda a: managed.managed_all_reduce(a, "x",
+                                                   mode="interleaved"),
+              (P(None),), P(None, None), x)
+    np.testing.assert_allclose(out, x * N, rtol=1e-5)
+    recs = [r for r in managed.decision_log() if r.op == "all_reduce"]
+    assert recs and all(r.mode == "interleaved" for r in recs)
+
+
+def test_all_reduce_scalar_fallback_logged(mesh8):
+    """0-d operands still fall back to lax.psum — and the DecisionRecord
+    says so (mode='bulk'), keeping the audit trail honest."""
+    managed.clear_decision_log()
+    out = run(mesh8,
+              lambda a: managed.managed_all_reduce(a[0, 0], "x",
+                                                   mode="interleaved"),
+              (P(None),), P(None), jnp.ones((1, 1), jnp.float32))
+    np.testing.assert_allclose(out, float(N))
+    recs = [r for r in managed.decision_log() if r.op == "all_reduce"]
+    assert recs and all(r.mode == "bulk" for r in recs)
+
+
+def test_bucketed_all_reduce_mixed_dtype(mesh8):
+    """Regression: a bf16 leaf ordered FIRST must not drag f32 grads
+    through a bf16 round-trip — buckets group by dtype."""
+    from repro.core import overlap
+    # values chosen to be destroyed by a bf16 cast (1 + 2^-10 etc.)
+    f32 = (1.0 + np.arange(24, dtype=np.float32) / 1024.0).reshape(4, 6)
+    bf16 = jnp.asarray(np.arange(8, dtype=np.float32), jnp.bfloat16)
+    tree = {"a_bf16": bf16, "b_f32": jnp.asarray(f32)}
+
+    out = run(mesh8,
+              lambda t: overlap.bucketed_all_reduce(t, "x",
+                                                    bucket_bytes=16),
+              ({"a_bf16": P(None), "b_f32": P(None)},),
+              {"a_bf16": P(None), "b_f32": P(None, None)}, tree)
+    assert out["b_f32"].dtype == jnp.float32
+    assert out["a_bf16"].dtype == jnp.bfloat16
+    # exact: psum of identical f32 values x8 is a power-of-two scale
+    np.testing.assert_array_equal(np.asarray(out["b_f32"]), f32 * N)
+    np.testing.assert_allclose(
+        np.asarray(out["a_bf16"], np.float32),
+        np.asarray(bf16, np.float32) * N, rtol=1e-2)
+
+
 def test_decision_log_records(mesh8, data):
     managed.clear_decision_log()
     run(mesh8, lambda a: managed.managed_all_gather(a, "x", "interleaved"),

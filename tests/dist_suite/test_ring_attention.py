@@ -1,0 +1,237 @@
+"""Ring attention (context parallelism) vs the bulk all-gather oracle on
+8 devices: the managed collective (fwd + re-streamed backward ring), the
+model-level schedule, the auto dispatcher's decision trail, and the
+return_kv cache contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import managed
+from repro.kernels import ref
+from repro.models import attention
+from repro.parallel.sharding import MeshCtx, smap
+
+
+def _cfg(n_heads=8, n_kv_heads=2, hd=16, d=64, tp_multiple=8):
+    return ModelConfig(name="t", family="dense", n_layers=2, d_model=d,
+                       n_heads=n_heads, n_kv_heads=n_kv_heads, d_ff=128,
+                       vocab_size=128, d_head=hd, tp_multiple=tp_multiple)
+
+
+@pytest.fixture(scope="module")
+def mesh18():
+    return jax.make_mesh((1, 8), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def qkv():
+    rng = np.random.default_rng(0)
+    b, S, h, kvh, hd = 2, 256, 4, 2, 32
+    return tuple(jnp.asarray(rng.normal(size=s).astype(np.float32))
+                 for s in ((b, S, h, hd), (b, S, kvh, hd), (b, S, kvh, hd)))
+
+
+# -- the managed collective ------------------------------------------------
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 70),
+                                           (False, 0), (False, 70)])
+@pytest.mark.parametrize("mode", ["bulk", "interleaved", "auto"])
+def test_managed_ring_attention_vs_ref(mesh8, qkv, causal, window, mode):
+    q, k, v = qkv
+    fn = jax.jit(smap(
+        lambda q_, k_, v_: managed.managed_ring_attention(
+            q_, k_, v_, "x", causal, window, mode),
+        mesh8, in_specs=(P(None, "x"),) * 3, out_specs=P(None, "x")))
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(fn(q, k, v)), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_managed_ring_attention_grads(mesh8, qkv, causal):
+    """The re-streamed backward ring == bulk-mode grads == autodiff of the
+    dense reference (dk/dv accumulators arrive home with the full sum)."""
+    q, k, v = qkv
+    rng = np.random.default_rng(1)
+    dout = jnp.asarray(rng.normal(size=q.shape).astype(np.float32))
+
+    def grads(mode):
+        def f(q_, k_, v_, d_):
+            o = managed.managed_ring_attention(q_, k_, v_, "x", causal, 0,
+                                               mode)
+            return jnp.sum(o * d_)
+        return jax.jit(smap(jax.grad(f, argnums=(0, 1, 2)), mesh8,
+                            in_specs=(P(None, "x"),) * 4,
+                            out_specs=(P(None, "x"),) * 3))(q, k, v, dout)
+
+    def fref(q_, k_, v_):
+        return jnp.sum(ref.flash_attention_ref(q_, k_, v_, causal=causal)
+                       * dout)
+
+    want = jax.grad(fref, argnums=(0, 1, 2))(q, k, v)
+    for mode in ("bulk", "interleaved"):
+        for g, w, nm in zip(grads(mode), want, "qkv"):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=3e-4, atol=3e-5,
+                                       err_msg=f"{mode} d{nm}")
+
+
+# -- the model-level schedule ----------------------------------------------
+
+
+def _run_attn(fn, mesh, cfg, ctx, x, params, **kw):
+    pspecs = (P(None, "model"), P(None, None), P("model", None))
+
+    def body(x_, wq, wkv, wo):
+        return fn(x_, {"w_q": wq, "w_kv": wkv, "w_o": wo}, cfg, ctx, **kw)
+
+    return np.asarray(jax.jit(smap(
+        body, mesh, in_specs=(P(None, "model"),) + pspecs,
+        out_specs=P(None, "model")))(
+        x, params["w_q"], params["w_kv"], params["w_o"]))
+
+
+@pytest.fixture(scope="module")
+def attn_inputs():
+    cfg = _cfg()
+    rng = np.random.default_rng(2)
+    b, S, d = 2, 128, cfg.d_model
+    hp, hd = cfg.padded_heads, cfg.head_dim
+    kvh = attention.padded_kv_heads(cfg)
+    x = jnp.asarray(rng.normal(size=(b, S, d)).astype(np.float32) * 0.1)
+    params = {
+        "w_q": jnp.asarray(
+            rng.normal(size=(d, hp * hd)).astype(np.float32) * 0.1),
+        "w_kv": jnp.asarray(
+            rng.normal(size=(d, 2 * kvh * hd)).astype(np.float32) * 0.1),
+        "w_o": jnp.asarray(
+            rng.normal(size=(hp * hd, d)).astype(np.float32) * 0.1),
+    }
+    return cfg, x, params
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 48),
+                                           (False, 0)])
+@pytest.mark.parametrize("mode", ["bulk", "interleaved"])
+def test_attention_sp_ring_matches_sp(mesh18, attn_inputs, causal, window,
+                                      mode):
+    """attention_sp_ring == attention_sp (bulk oracle) on the 8-way model
+    axis, causal and non-causal prefill, with GQA (8 q heads : 2 kv)."""
+    cfg, x, params = attn_inputs
+    want = _run_attn(attention.attention_sp, mesh18, cfg,
+                     MeshCtx.from_mesh(mesh18, "bulk"), x, params,
+                     causal=causal, window=window)
+    got = _run_attn(attention.attention_sp_ring, mesh18, cfg,
+                    MeshCtx.from_mesh(mesh18, mode), x, params,
+                    causal=causal, window=window)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-5)
+
+
+def test_attention_sp_ring_return_kv(mesh18, attn_inputs):
+    """The prefill cache path: ring returns this rank's sequence slice
+    with ALL kv heads — same contract as attention_sp/ulysses."""
+    cfg, x, params = attn_inputs
+    pspecs = (P(None, "model"), P(None, None), P("model", None))
+
+    def run(fn, mode):
+        def body(x_, wq, wkv, wo):
+            y, (k, v) = fn(x_, {"w_q": wq, "w_kv": wkv, "w_o": wo}, cfg,
+                           MeshCtx.from_mesh(mesh18, mode), causal=True,
+                           return_kv=True)
+            return y, k, v
+        return [np.asarray(a) for a in jax.jit(smap(
+            body, mesh18, in_specs=(P(None, "model"),) + pspecs,
+            out_specs=(P(None, "model"),) * 3))(
+            x, params["w_q"], params["w_kv"], params["w_o"])]
+
+    y1, k1, v1 = run(attention.attention_sp, "bulk")
+    y2, k2, v2 = run(attention.attention_sp_ring, "interleaved")
+    np.testing.assert_allclose(y2, y1, rtol=3e-4, atol=3e-5)
+    np.testing.assert_allclose(k2, k1, rtol=3e-4, atol=3e-5)
+    np.testing.assert_allclose(v2, v1, rtol=3e-4, atol=3e-5)
+
+
+def test_auto_logs_decision_per_layer(mesh18, attn_inputs):
+    """mode='auto' routes through resolve_attention_schedule and logs one
+    decide_attention_schedule DecisionRecord per (unrolled) layer."""
+    cfg, x, params = attn_inputs
+    managed.clear_decision_log()
+    ctx = MeshCtx.from_mesh(mesh18, "auto")
+    want = _run_attn(attention.attention_sp, mesh18, cfg,
+                     MeshCtx.from_mesh(mesh18, "bulk"), x, params,
+                     causal=True)
+    for _ in range(cfg.n_layers):
+        got = _run_attn(attention.attention_sp_auto, mesh18, cfg, ctx, x,
+                        params, causal=True)
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-5)
+    recs = [r for r in managed.decision_log()
+            if r.op == "attention_schedule"]
+    assert len(recs) >= cfg.n_layers
+    assert all(r.mode in ("bulk", "ulysses", "ring") for r in recs)
+    assert all(r.axis == "model" for r in recs)
+
+
+def test_train_step_with_ring_attention():
+    """End-to-end: a (2x2) train step with attn_impl='ring' (both comm
+    modes) and 'auto' matches the megatron bulk baseline — the ring VJP
+    composes with lax.scan, jax.checkpoint remat, and the FSDP gather
+    transposes."""
+    import dataclasses
+    from repro import configs
+    from repro.data.pipeline import DataConfig, SyntheticLMData
+    from repro.models.model import Model
+    from repro.optim.adamw import AdamWConfig, adamw_init
+    from repro.train.train_loop import build_train_step
+
+    base = dataclasses.replace(configs.get_reduced("granite-34b"),
+                               dtype="float32")
+
+    def train_once(cfg, mode, params0, batch_np):
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        ctx = MeshCtx.from_mesh(mesh, mdmp_mode=mode)
+        model = Model(cfg, ctx)
+        step_fn, pshard, bshard = build_train_step(
+            model, AdamWConfig(lr=1e-2), mesh, donate=False)
+        params = jax.tree.map(
+            lambda a, s: jax.device_put(np.asarray(a), s), params0, pshard)
+        opt = adamw_init(params, AdamWConfig())
+        batch = {kk: jax.device_put(vv, bshard[kk])
+                 for kk, vv in batch_np.items()}
+        p2, _, m = step_fn(params, opt, batch)
+        return float(m["loss"]), jax.tree.map(np.asarray, p2)
+
+    mesh1 = jax.make_mesh((1, 1), ("data", "model"))
+    params0 = jax.tree.map(
+        np.asarray, Model(base, MeshCtx.from_mesh(mesh1)).init(
+            jax.random.key(0)))
+    batch = SyntheticLMData(DataConfig(
+        vocab_size=base.vocab_size, seq_len=32,
+        global_batch=4)).global_batch_at(0)
+
+    l_ref, p_ref = train_once(base, "bulk", params0, batch)
+    for impl, mode in (("ring", "bulk"), ("ring", "interleaved"),
+                       ("auto", "auto")):
+        cfg = dataclasses.replace(base, attn_impl=impl)
+        l, p = train_once(cfg, mode, params0, batch)
+        np.testing.assert_allclose(l, l_ref, rtol=2e-4,
+                                   err_msg=f"{impl} {mode}")
+        for (k1, a), (_, b) in zip(
+                jax.tree_util.tree_flatten_with_path(p_ref)[0],
+                jax.tree_util.tree_flatten_with_path(p)[0]):
+            np.testing.assert_allclose(a, b, rtol=2e-3, atol=3e-4,
+                                       err_msg=f"{impl} {mode} {k1}")
+
+
+def test_forced_interleaved_resolves_to_ring():
+    """The paper's always-intermingle mode pins the streaming schedule."""
+    d = managed.resolve_attention_schedule(
+        "model", 8, 1, 4096, 32, 8, 128, 4096, mode="interleaved")
+    assert d.schedule == "ring"
+    d = managed.resolve_attention_schedule(
+        "model", 8, 1, 4096, 32, 8, 128, 4096, mode="bulk")
+    assert d.schedule == "bulk"

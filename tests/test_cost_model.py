@@ -122,6 +122,54 @@ def test_halo_decision_never_worse_than_bulk(rows, cols):
     assert d.per_sweep_s[d.k] == min(d.per_sweep_s.values())
 
 
+# -- attention schedule (bulk gather vs ulysses a2a vs ring streaming) -------
+
+
+@given(batch=st.integers(min_value=1, max_value=32),
+       s_local=st.sampled_from([128, 1024, 8192, 65536]),
+       heads=st.sampled_from([8, 32, 128]),
+       n=st.sampled_from([2, 4, 8, 16]),
+       causal=st.booleans())
+@settings(max_examples=100, deadline=None)
+def test_attention_decision_is_argmin(batch, s_local, heads, n, causal):
+    """decide_attention_schedule must pick the schedule it predicts to be
+    fastest, and every modeled time must be positive and finite."""
+    d = cm.decide_attention_schedule(batch, s_local, heads, max(1, heads // 4),
+                                     128, heads * 128, n, causal=causal)
+    assert d.schedule in ("bulk", "ulysses", "ring")
+    assert set(d.times_s) == {"bulk", "ulysses", "ring"}
+    for t in d.times_s.values():
+        assert t > 0 and math.isfinite(t)
+    assert d.chosen_s <= min(d.times_s.values()) * (1 + 1e-9)
+
+
+@given(n=st.sampled_from([4, 8, 16]))
+@settings(max_examples=20, deadline=None)
+def test_attention_ring_wins_long_context(n):
+    """Long-context prefill is the ring's home turf: per-step KV transfer
+    hides under per-block flash, while the bulk schedule's sequence gather
+    grows with S — the crossover the PR 2 tentpole is built on."""
+    d = cm.decide_attention_schedule(1, 65536 // n, 32, 8, 128, 4096, n,
+                                     causal=False)
+    assert d.schedule == "ring"
+    assert d.times_s["ring"] < d.times_s["bulk"]
+
+
+def test_attention_force_schedule():
+    for s in ("bulk", "ulysses", "ring"):
+        d = cm.decide_attention_schedule(1, 1024, 32, 8, 128, 4096, 8,
+                                         force_schedule=s)
+        assert d.schedule == s
+
+
+def test_attention_tiny_seq_prefers_gather():
+    """At tiny sequence lengths the per-step alpha of the ring dominates;
+    the manager must keep a gather-style schedule."""
+    d = cm.decide_attention_schedule(1, 64, 8, 8, 64, 512, 8, causal=True)
+    assert d.times_s["ring"] >= min(d.times_s["bulk"],
+                                    d.times_s["ulysses"]) * (1 - 1e-9)
+
+
 def test_halo_aggregation_prefers_deep_halos_when_latency_dominates():
     """Small local blocks on a high-alpha machine: per-message latency
     dominates, so the manager must aggregate (k > 1) — the MatlabMPI /

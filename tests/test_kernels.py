@@ -11,7 +11,10 @@ pytest.importorskip("hypothesis",
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
-from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention import (finalize_partials,
+                                           flash_attention_carry_pallas,
+                                           flash_attention_pallas,
+                                           init_partials, merge_partials)
 from repro.kernels.stencil import (jacobi_ksweep_pallas,
                                    jacobi_multistep_pallas,
                                    jacobi_step_pallas)
@@ -81,6 +84,78 @@ def test_flash_blockwise_property(b, kvh_mult, hd):
     out = ops.flash_attention_blockwise(q, k, v, causal=True, blk_kv=64)
     want = ref.flash_attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(out, want, rtol=3e-5, atol=3e-5)
+
+
+# -- online-softmax merge (ring attention's combiner) ------------------------
+
+
+@given(st.integers(min_value=0, max_value=2 ** 30),
+       st.integers(min_value=1, max_value=3),
+       st.booleans(),
+       st.sampled_from([0, 37]),
+       st.integers(min_value=2, max_value=5))
+@settings(max_examples=20, deadline=None)
+def test_online_softmax_merge_property(seed, kvh, causal, window, n_cuts):
+    """Merging flash partials over an ARBITRARY kv-block split (chained
+    carry AND pairwise merge_partials, any order) is bit-tolerant against
+    attend_ref on the full sequence — causal, sliding-window, and GQA
+    head-group cases.  This is the invariant ring attention rests on."""
+    rng = np.random.default_rng(seed)
+    b, sq, skv, hd = 1, 32, 96, 16
+    h = kvh * 2                                     # GQA 2:1
+    q = _rand(rng, (b, sq, h, hd), jnp.float32)
+    k = _rand(rng, (b, skv, kvh, hd), jnp.float32)
+    v = _rand(rng, (b, skv, kvh, hd), jnp.float32)
+    q_offset = skv - sq                             # q at the sequence end
+
+    cuts = sorted(set(rng.integers(1, skv, size=n_cuts).tolist()))
+    bounds = [0, *cuts, skv]
+    segments = list(zip(bounds[:-1], bounds[1:]))
+
+    want = np.asarray(ref.flash_attention_ref(
+        q, k, v, causal=causal, window=window, q_offset=q_offset))
+
+    # (a) chained carry through the segments in order
+    carry = None
+    # (b) independent partials, merged pairwise in REVERSED order
+    partials = []
+    for lo, hi in segments:
+        carry = ops.flash_attention_step(
+            q, k[:, lo:hi], v[:, lo:hi], carry, causal=causal,
+            window=window, q_offset=q_offset, k_offset=lo)
+        partials.append(ops.flash_attention_step(
+            q, k[:, lo:hi], v[:, lo:hi], None, causal=causal,
+            window=window, q_offset=q_offset, k_offset=lo))
+    out_chain, _ = finalize_partials(*carry)
+    merged = partials[-1]
+    for p in reversed(partials[:-1]):
+        merged = merge_partials(merged, p)
+    out_merge, _ = finalize_partials(*merged)
+
+    np.testing.assert_allclose(np.asarray(out_chain), want,
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(out_merge), want,
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_carry_pallas_matches_jnp_engine(causal):
+    """The Pallas carry kernel (interpret mode) and the jnp engine produce
+    the same partials for the same KV block, traced offsets included."""
+    rng = np.random.default_rng(5)
+    b, sq, skv, h, kvh, hd = 1, 64, 64, 4, 2, 32
+    q = _rand(rng, (b, sq, h, hd), jnp.float32)
+    k = _rand(rng, (b, skv, kvh, hd), jnp.float32)
+    v = _rand(rng, (b, skv, kvh, hd), jnp.float32)
+    m0, l0, a0 = init_partials(b, sq, h, hd)
+    got = flash_attention_carry_pallas(
+        q, k, v, m0, l0, a0, causal=causal, q_offset=jnp.int32(64),
+        k_offset=jnp.int32(32), blk_q=32, blk_kv=32, interpret=True)
+    want = ops._flash_step_jnp(q, k, v, m0, l0, a0, causal, 0,
+                               jnp.int32(64), jnp.int32(32), 32)
+    for g, w, nm in zip(got, want, ("m", "l", "acc")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-5, atol=2e-5, err_msg=nm)
 
 
 @pytest.mark.parametrize("m,n,bm,bn", [
