@@ -242,6 +242,87 @@ def bench_ring_attention(mesh) -> list[tuple[str, float, str]]:
     return rows
 
 
+def bench_serving() -> list[tuple[str, float, str]]:
+    """Serving runtime (PR 3 tentpole): static waves vs continuous
+    batching over the paged KV cache on a mixed-prompt-length queue.
+    Every continuous variant is asserted token-equal to the static run
+    per request; the value column is measured useful tokens/s and the
+    derived column carries TTFT/TPOT and the speedup vs static.  The
+    decision row closes the MDMP loop: cost-model seed -> measured
+    winner recorded by the tuner -> pinned into the decision trail."""
+    from repro.configs.base import ModelConfig
+    from repro.models.model import Model
+    from repro.parallel.sharding import MeshCtx, infer_shardings
+    from repro.serve.engine import ServeEngine
+
+    rows = []
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = ModelConfig(name="serve-bench", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=256, d_head=16, tp_multiple=4,
+                      dtype="float32")
+    ctx = MeshCtx.from_mesh(mesh, mdmp_mode="bulk")
+    model = Model(cfg, ctx)
+    params = jax.tree.map(
+        lambda a, s: jax.device_put(np.asarray(a), s),
+        model.init(jax.random.key(0)),
+        infer_shardings(model.param_specs(), mesh))
+    rng = np.random.default_rng(5)
+    plens = [4, 28, 8, 44, 6, 20, 12, 36, 5, 24, 10, 40]   # mixed lengths
+    n_new, slots = 16, 4
+    prompts = [rng.integers(0, cfg.vocab_size - 1, size=p)
+               .astype(np.int32) for p in plens]
+
+    def run(schedule, chunk):
+        eng = ServeEngine(model, mesh, params, slots=slots, max_seq=64,
+                          page_size=8, schedule=schedule, chunk=chunk)
+        rids = [eng.submit(p, n_new) for p in prompts]
+        res = eng.run()
+        return [res[r] for r in rids], eng.metrics.summary()
+
+    out_static, m_static = run("static", 8)
+    rows.append(("serve_static_c8", m_static["useful_tok_s"],
+                 f"ttft={m_static['mean_ttft_s']*1e3:.0f}ms "
+                 f"occ={m_static['occupancy']:.2f} "
+                 f"quanta={m_static['quanta']}"))
+    measured = {"static:8": 1.0 / max(m_static["useful_tok_s"], 1e-9)}
+    for c in (4, 8, 16):
+        out_c, m = run("continuous", c)
+        for a, b in zip(out_c, out_static):
+            np.testing.assert_array_equal(a, b)
+        measured[f"continuous:{c}"] = 1.0 / max(m["useful_tok_s"], 1e-9)
+        rows.append((f"serve_cont_c{c}", m["useful_tok_s"],
+                     f"x{m['useful_tok_s']/m_static['useful_tok_s']:.2f}"
+                     f" vs static; ttft={m['mean_ttft_s']*1e3:.0f}ms "
+                     f"tpot={m['mean_tpot_s']*1e3:.2f}ms "
+                     f"occ={m['occupancy']:.2f} quanta={m['quanta']}; "
+                     "tokens==static"))
+
+    # the managed decision: cost-model seed -> measured override -> trail
+    from repro.core.tuner import ScheduleTuner
+    tuner = ScheduleTuner()
+    entry = tuner.decide_serve(
+        slots, int(np.mean(plens)), n_new, cfg.param_count(),
+        dtype_str="float32", dtype_bytes=4, max_prompt=int(max(plens)))
+    seed = f"{entry.mode}:{entry.chunks}"
+    for variant, s_per_tok in measured.items():
+        mode, c = variant.split(":")
+        tuner.record(entry.key, mode, int(c), s_per_tok)
+    win = tuner.entries[entry.key]
+    managed.clear_decision_log()
+    decision = managed.resolve_serve_schedule(
+        "serve", slots, float(np.mean(plens)), float(n_new),
+        float(cfg.param_count()), dtype_bytes=4,
+        max_prompt=float(max(plens)), schedule=win.mode,
+        chunk=win.chunks)
+    rec = managed.decision_log()[-1]
+    rows.append((f"serve_decision_{decision.mode}_c{decision.chunk}",
+                 1.0 / measured[f"{win.mode}:{win.chunks}"],
+                 f"tuner-measured winner (seed={seed}); "
+                 f"trail={rec.op}({rec.mode} C={rec.chunks})"))
+    return rows
+
+
 def main_child() -> None:
     mesh = jax.make_mesh((8,), ("x",))
     rows = []
@@ -249,6 +330,7 @@ def main_child() -> None:
     rows += bench_pingpong(mesh)
     rows += bench_jacobi(mesh)
     rows += bench_ring_attention(mesh)
+    rows += bench_serving()
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
 

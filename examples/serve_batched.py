@@ -1,5 +1,9 @@
-"""Batched serving example: greedy decoding with the TP-2D decode flow
-(sequence-sharded KV cache + distributed LSE merge).
+"""Batched serving example — the managed serving runtime end to end.
+
+Submits a queue of mixed-length requests to the ServeEngine (paged KV
+cache + continuous batching; repro/serve) instead of hand-rolling a
+prefill/decode loop, prints each request's greedy completion, and shows
+the MDMP serve-schedule decision the managed runtime made for the queue.
 
     PYTHONPATH=src python examples/serve_batched.py [arch]
 """
@@ -10,10 +14,10 @@ import jax
 import numpy as np
 
 from repro import configs
-from repro.configs.base import ShapeConfig
+from repro.core import managed
 from repro.models.model import Model
 from repro.parallel.sharding import MeshCtx, infer_shardings
-from repro.train.serve_loop import Generator
+from repro.serve.engine import ServeEngine
 
 
 def main() -> None:
@@ -27,15 +31,24 @@ def main() -> None:
         model.init(jax.random.key(0)),
         infer_shardings(model.param_specs(), mesh))
 
-    shape = ShapeConfig("serve", seq_len=64, global_batch=4, kind="decode")
-    gen = Generator(model, mesh, shape, params)
+    engine = ServeEngine(model, mesh, params, slots=2, max_seq=64,
+                         page_size=8, schedule="auto")
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size - 1, size=(4, 8)).astype(
-        np.int32)
-    out = gen.generate(prompts, n_new=16)
-    for i, row in enumerate(out):
-        print(f"request {i}: prompt={prompts[i].tolist()} "
-              f"-> {row.tolist()}")
+    prompts = [rng.integers(0, cfg.vocab_size - 1, size=p).astype(np.int32)
+               for p in (8, 3, 12, 5)]
+    rids = [engine.submit(p, 16) for p in prompts]
+    out = engine.run()
+
+    for i, rid in enumerate(rids):
+        print(f"request {rid}: prompt={prompts[i].tolist()} "
+              f"-> {out[rid].tolist()}")
+    s = engine.metrics.summary()
+    print(f"{s['useful_tok_s']:.1f} useful tok/s over {s['quanta']} quanta, "
+          f"occupancy {s['occupancy']:.2f}")
+    for rec in managed.decision_log():
+        if rec.op == "serve_schedule":
+            print(f"managed decision: serve_schedule({rec.mode}, "
+                  f"C={rec.chunks})")
 
 
 if __name__ == "__main__":

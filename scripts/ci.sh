@@ -11,6 +11,16 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
+echo "== serve smoke (managed serving runtime, schedule=auto) =="
+serve_out="$(python -m repro.launch.serve --arch mamba2-130m --reduced \
+    --schedule auto --requests 6 --slots 2 --new-tokens 8 --max-seq 64 \
+    --prompt-len 12)"
+echo "$serve_out" | head -8
+echo "$serve_out" | grep -q "tok/s" || {
+    echo "FAIL: serve smoke produced no throughput line"; exit 1; }
+echo "$serve_out" | grep -q "decision serve_schedule(" || {
+    echo "FAIL: serve smoke missing the serve_schedule decision"; exit 1; }
+
 echo "== benchmark smoke (python -m benchmarks.run) =="
 out="$(MDMP_BENCH_REPS="${MDMP_BENCH_REPS:-2}" python -m benchmarks.run)"
 echo "$out" | tail -40
@@ -31,6 +41,16 @@ echo "$out" | grep -q "attn_sched_tpu_v5e_causal_chosen" || {
     echo "FAIL: attention schedule model rows missing"; exit 1; }
 echo "$out" | grep -q "ring_attn_decision_.*trail=attention_schedule" || {
     echo "FAIL: attention decision trail entry missing"; exit 1; }
+# Serving smoke: the static-vs-continuous sweep must have run (measured
+# rows with token-equality asserted in-suite), the modeled schedule table
+# must be present, and the decision trail must contain a serve_schedule
+# entry with the tuner-measured winner.
+echo "$out" | grep -q "serve_cont_c.*tokens==static" || {
+    echo "FAIL: measured continuous-batching sweep rows missing"; exit 1; }
+echo "$out" | grep -q "serve_sched_tpu_v5e_chosen" || {
+    echo "FAIL: serve schedule model rows missing"; exit 1; }
+echo "$out" | grep -q "serve_decision_.*trail=serve_schedule" || {
+    echo "FAIL: serve decision trail entry missing"; exit 1; }
 echo "$out" | grep -q "measured_suite,0.00,ERROR" && {
     echo "FAIL: measured suite subprocess errored"; exit 1; }
 echo "CI OK"

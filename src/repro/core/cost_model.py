@@ -585,6 +585,176 @@ def decide_attention_schedule(batch: int, s_local: int, heads: int,
 
 
 # ---------------------------------------------------------------------------
+# Serve schedule decision (continuous batching + scheduling quantum)
+# ---------------------------------------------------------------------------
+#
+# The serving runtime (repro/serve) advances every active slot by one token
+# per engine step; the scheduler groups C steps into one dispatched quantum
+# and only admits/retires requests at quantum boundaries.  The quantum is
+# the serving analogue of the halo aggregation factor k: a bigger C
+# amortises the per-dispatch overhead (the alpha of this decision) over
+# more tokens, but coarsens scheduling — a slot whose request finishes
+# mid-quantum idles until the boundary, and a queued request waits ~C/2
+# steps for admission (TTFT).  Two batching modes share the quantum knob:
+#
+#   static      — admit a wave of B requests, run it to completion, admit
+#                 the next wave (the unmanaged baseline, = the seed
+#                 Generator).  Every request pads to the wave's longest
+#                 (prompt + new) length: occupancy = mean_total/max_total.
+#   continuous  — refill freed slots from the queue at every quantum
+#                 boundary: occupancy ~= 1 - C/(2 * mean_total) (a
+#                 completing request wastes C/2 slot-steps on average).
+#
+# Per-engine-step time is the decode roofline: every step streams the
+# weights once from HBM and does 2*N flops per slot-token —
+# max(P_bytes/hbm_bw, 2*N*B/peak).  The scheduler seeds C and the mode
+# from this model and corrects both online from the measured step-latency
+# counters (serve/metrics.py) — the paper's iteration-(k)->(k+1) loop.
+
+
+#: default per-dispatch overhead (host scheduling + launch) used when no
+#: measurement is available yet; on-model for a jitted multi-device launch
+DISPATCH_OVERHEAD_S = 1.0e-4
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeScheduleDecision:
+    """Outcome of the serve-schedule decision for one serving call site."""
+    mode: str                      # "static" | "continuous"
+    chunk: int                     # scheduling quantum C (tokens/slot/call)
+    tok_s: dict[str, float]        # "mode:C" -> modeled useful tokens/s
+    static_tok_s: float            # best static variant
+    chosen_tok_s: float
+    step_s: float                  # per-engine-step seconds (whole batch)
+    dispatch_s: float              # per-quantum dispatch overhead
+    ttft_s: float                  # modeled mean TTFT at the chosen schedule
+
+    @property
+    def predicted_speedup(self) -> float:
+        if self.chosen_tok_s <= 0:
+            return 1.0
+        return self.chosen_tok_s / max(self.static_tok_s, 1e-30)
+
+
+def serve_step_time(n_params: float, batch_slots: int, *,
+                    dtype_bytes: int = 2,
+                    hw: HardwareModel = DEFAULT_HW) -> float:
+    """Decode-step roofline: one token for each of ``batch_slots`` slots
+    streams the weights once from HBM (memory-bound at small batch) against
+    2*N flops per slot-token (compute-bound once the batch is large)."""
+    mem = n_params * dtype_bytes / hw.hbm_bw
+    flops = 2.0 * n_params * max(1, batch_slots) / hw.peak_flops
+    return max(mem, flops)
+
+
+def serve_schedule_times(n_params: float, batch_slots: int,
+                         mean_prompt: float, mean_new: float, *,
+                         max_prompt: float | None = None,
+                         dtype_bytes: int = 2,
+                         hw: HardwareModel = DEFAULT_HW,
+                         dispatch_s: float = DISPATCH_OVERHEAD_S,
+                         measured_step_s: float | None = None,
+                         measured_dispatch_s: float | None = None,
+                         candidate_chunks: Sequence[int] = (1, 2, 4, 8, 16,
+                                                            32)
+                         ) -> tuple[dict[str, float], float, float]:
+    """(variant -> useful tokens/s, step_s, dispatch_s) for every
+    "mode:C" candidate.  Measured overrides replace the modeled roofline
+    terms (metrics.py feeds them back between quanta)."""
+    b = max(1, batch_slots)
+    step = measured_step_s if measured_step_s is not None else \
+        serve_step_time(n_params, b, dtype_bytes=dtype_bytes, hw=hw)
+    disp = measured_dispatch_s if measured_dispatch_s is not None \
+        else dispatch_s
+    mean_total = max(1.0, float(mean_prompt) + float(mean_new))
+    max_total = max(mean_total,
+                    float(max_prompt if max_prompt is not None
+                          else mean_prompt) + float(mean_new))
+    times: dict[str, float] = {}
+    for c in sorted({int(c) for c in candidate_chunks if c >= 1}):
+        quantum = disp + c * step
+        # static: padding to the wave's longest request is the only waste
+        occ_static = mean_total / max_total
+        times[f"static:{c}"] = b * c * occ_static / quantum
+        # continuous: a request completing mid-quantum idles its slot for
+        # C/2 steps on average before the boundary refill
+        occ_cont = max(0.0, 1.0 - 0.5 * c / mean_total)
+        times[f"continuous:{c}"] = b * c * occ_cont / quantum
+    return times, step, disp
+
+
+def serve_ttft_s(chunk: int, mean_prompt: float, step_s: float,
+                 dispatch_s: float) -> float:
+    """Modeled TTFT for a request admitted from the queue: half a quantum
+    of boundary wait plus the prompt steps (each quantum pays one
+    dispatch)."""
+    c = max(1, int(chunk))
+    quanta = math.ceil(max(1.0, float(mean_prompt)) / c)
+    return 0.5 * (dispatch_s + c * step_s) + quanta * dispatch_s \
+        + float(mean_prompt) * step_s
+
+
+def decide_serve_schedule(n_params: float, batch_slots: int,
+                          mean_prompt: float, mean_new: float, *,
+                          max_prompt: float | None = None,
+                          dtype_bytes: int = 2,
+                          hw: HardwareModel = DEFAULT_HW,
+                          dispatch_s: float = DISPATCH_OVERHEAD_S,
+                          measured_step_s: float | None = None,
+                          measured_dispatch_s: float | None = None,
+                          candidate_chunks: Sequence[int] = (1, 2, 4, 8, 16,
+                                                             32),
+                          ttft_budget_s: float | None = None,
+                          force_mode: str | None = None,
+                          force_chunk: int | None = None
+                          ) -> ServeScheduleDecision:
+    """Pick the batching mode and scheduling quantum for one serving call
+    site.  ``force_mode``/``force_chunk`` pin the choice (an MDMPConfig
+    bulk override, or the tuner's measured winner) while still reporting
+    the modeled table; a ``ttft_budget_s`` drops continuous candidates
+    whose modeled TTFT overruns it (the smallest candidate always
+    survives)."""
+    times, step, disp = serve_schedule_times(
+        n_params, batch_slots, mean_prompt, mean_new,
+        max_prompt=max_prompt, dtype_bytes=dtype_bytes, hw=hw,
+        dispatch_s=dispatch_s, measured_step_s=measured_step_s,
+        measured_dispatch_s=measured_dispatch_s,
+        candidate_chunks=candidate_chunks)
+
+    def ttft(c: int) -> float:
+        return serve_ttft_s(c, mean_prompt, step, disp)
+
+    chunks = sorted({int(v.split(":")[1]) for v in times})
+    static_best = max((times[f"static:{c}"], c) for c in chunks)
+    cont_ok = [c for c in chunks
+               if ttft_budget_s is None or ttft(c) <= ttft_budget_s]
+    if not cont_ok:
+        cont_ok = [min(chunks)]
+    cont_best = max((times[f"continuous:{c}"], c) for c in cont_ok)
+
+    mode, chunk = (("continuous", cont_best[1])
+                   if cont_best[0] > static_best[0]
+                   else ("static", static_best[1]))
+    if force_mode is not None:
+        assert force_mode in ("static", "continuous"), force_mode
+        mode = force_mode
+        chunk = (cont_best if mode == "continuous" else static_best)[1]
+    if force_chunk is not None:
+        chunk = max(1, int(force_chunk))
+        if f"{mode}:{chunk}" not in times:
+            times[f"{mode}:{chunk}"] = serve_schedule_times(
+                n_params, batch_slots, mean_prompt, mean_new,
+                max_prompt=max_prompt, dtype_bytes=dtype_bytes, hw=hw,
+                dispatch_s=dispatch_s, measured_step_s=measured_step_s,
+                measured_dispatch_s=measured_dispatch_s,
+                candidate_chunks=(chunk,))[0][f"{mode}:{chunk}"]
+    return ServeScheduleDecision(
+        mode=mode, chunk=chunk, tok_s=times,
+        static_tok_s=static_best[0], chosen_tok_s=times[f"{mode}:{chunk}"],
+        step_s=step, dispatch_s=disp, ttft_s=ttft(chunk))
+
+
+# ---------------------------------------------------------------------------
 # Roofline terms (used by benchmarks/roofline.py on dry-run artifacts)
 # ---------------------------------------------------------------------------
 

@@ -893,6 +893,51 @@ def resolve_attention_schedule(axis_name: str, axis_size: int, batch: int,
     return decision
 
 
+def resolve_serve_schedule(axis_name: str, batch_slots: int,
+                           mean_prompt: float, mean_new: float,
+                           n_params: float, *, dtype_bytes: int = 2,
+                           max_prompt: float | None = None,
+                           measured_step_s: float | None = None,
+                           measured_dispatch_s: float | None = None,
+                           ttft_budget_s: float | None = None,
+                           mode: str | None = None,
+                           schedule: str | None = None,
+                           chunk: int | None = None
+                           ) -> cost_model.ServeScheduleDecision:
+    """The managed-runtime entry for the serving schedule (static waves vs
+    continuous batching, plus the scheduling-quantum C) — the analogue of
+    ``resolve_halo_aggregation`` for the serving runtime.  Called between
+    engine quanta with host-side statistics; the chosen (mode, C) feeds
+    ``serve/scheduler.py`` and lands in the decision log.
+
+    ``mode='bulk'`` pins static waves (the paper-faithful unmanaged
+    baseline, = the seed Generator); ``mode='interleaved'`` pins
+    continuous batching; ``schedule``/``chunk`` pin an explicit choice
+    (the tuner's measured winner).  Measured step/dispatch seconds from
+    ``serve/metrics.py`` override the modeled roofline terms — the
+    iteration-(k)->(k+1) correction.  The DecisionRecord reuses ``chunks``
+    to carry C and the predicted fields to carry seconds-per-token."""
+    cfg = get_config()
+    eff_mode = mode or cfg.mode
+    force = {"bulk": "static", "interleaved": "continuous"}.get(eff_mode,
+                                                                schedule)
+    decision = cost_model.decide_serve_schedule(
+        n_params, batch_slots, mean_prompt, mean_new,
+        max_prompt=max_prompt, dtype_bytes=dtype_bytes, hw=cfg.hw,
+        measured_step_s=measured_step_s,
+        measured_dispatch_s=measured_dispatch_s,
+        ttft_budget_s=ttft_budget_s, force_mode=force, force_chunk=chunk)
+    if cfg.log_decisions:
+        _DECISION_LOG.append(DecisionRecord(
+            op="serve_schedule", axis=axis_name,
+            nbytes=int(n_params) * dtype_bytes,
+            mode=decision.mode, chunks=decision.chunk,
+            predicted_bulk_s=1.0 / max(decision.static_tok_s, 1e-30),
+            predicted_interleaved_s=1.0 / max(decision.chosen_tok_s,
+                                              1e-30)))
+    return decision
+
+
 # ---------------------------------------------------------------------------
 # Convenience: sequence-parallel psum replacement
 # ---------------------------------------------------------------------------

@@ -155,6 +155,24 @@ class CommRegion:
             shape=(int(batch), int(s_local), int(heads), int(kv_heads),
                    int(head_dim), int(d_model), int(causal), int(ib))))
 
+    def serve(self, label: str, *, axis: str, batch_slots: int,
+              mean_prompt: int, mean_new: int, n_params: int, dtype,
+              max_prompt: int | None = None) -> None:
+        """Declare a serving call site (the engine's step loop over
+        ``batch_slots`` decode slots).  Planning runs the serve-schedule
+        decision for it: the resulting PlanEntry's ``mode`` is the chosen
+        batching mode ("static" | "continuous") and ``chunks`` the
+        scheduling quantum C, read back via ``plan.mode_for(label)`` /
+        ``plan.chunks_for(label)`` and fed to ``serve/scheduler.py``."""
+        import numpy as np
+        ib = np.dtype(dtype).itemsize
+        self._specs.append(CommSpec(
+            label=label, kind="serve", axis=axis,
+            nbytes=int(n_params) * ib, collective="serve",
+            shape=(int(batch_slots), int(mean_prompt), int(mean_new),
+                   int(max_prompt if max_prompt is not None
+                       else mean_prompt), int(n_params), int(ib))))
+
     # -- planning -----------------------------------------------------------
 
     def plan(self, fn: Callable, *example_args: Any,
@@ -205,6 +223,23 @@ class CommRegion:
                     spec=spec, mode=d.schedule, chunks=1,
                     overlap_budget=1.0, predicted_bulk_s=d.bulk_s,
                     predicted_interleaved_s=d.chosen_s)
+                continue
+            if spec.kind == "serve":
+                # The batching knob: static waves vs continuous batching
+                # plus the scheduling quantum C, routed through the managed
+                # runtime so the choice lands in the MDMP decision log.
+                (batch_slots, mean_prompt, mean_new, max_prompt,
+                 n_params, ib) = spec.shape
+                with managed.use_config(self.config):
+                    d = managed.resolve_serve_schedule(
+                        spec.axis, batch_slots, mean_prompt, mean_new,
+                        n_params, dtype_bytes=ib, max_prompt=max_prompt)
+                entries[spec.label] = PlanEntry(
+                    spec=spec, mode=d.mode, chunks=d.chunk,
+                    overlap_budget=1.0,
+                    predicted_bulk_s=1.0 / max(d.static_tok_s, 1e-30),
+                    predicted_interleaved_s=1.0 / max(d.chosen_tok_s,
+                                                      1e-30))
                 continue
             budget = (report.overlap_budget(spec.label)
                       if spec.label in report.records else 1.0)

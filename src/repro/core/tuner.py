@@ -62,6 +62,11 @@ class ScheduleTuner:
     #: schedule name (bulk sequence-gather / ulysses a2a / ring streaming)
     ATTENTION_CANDIDATES = (("bulk", 1), ("ulysses", 1), ("ring", 1))
 
+    #: candidate (mode, C) variants for serving call sites — ``mode``
+    #: carries the batching mode, ``chunks`` the scheduling quantum C
+    SERVE_CANDIDATES = (("static", 8), ("continuous", 2),
+                        ("continuous", 8), ("continuous", 32))
+
     def __init__(self, hw: HardwareModel = TPU_V5E,
                  path: str | None = None):
         self.hw = hw
@@ -132,6 +137,31 @@ class ScheduleTuner:
             self._entries[key] = entry
         return entry
 
+    def decide_serve(self, batch_slots: int, mean_prompt: int,
+                     mean_new: int, n_params: int, *,
+                     dtype_str: str = "bfloat16", dtype_bytes: int = 2,
+                     max_prompt: int | None = None) -> TunerEntry:
+        """Schedule decision for a serving call site: seeded from the
+        serve cost model (``mode`` carries static/continuous, ``chunks``
+        the scheduling quantum C), then overridden by measured tokens/s
+        fed back through ``record(key, "continuous", C, seconds_per_tok)``
+        — the paper's iteration-(k)->(k+1) adaptation applied to the
+        batching knob.  Persisted like every other entry."""
+        key = call_site_key(
+            "serve_schedule",
+            (batch_slots, int(mean_prompt), int(mean_new), int(n_params)),
+            dtype_str, "serve", batch_slots)
+        entry = self._entries.get(key)
+        if entry is None:
+            d = cost_model.decide_serve_schedule(
+                n_params, batch_slots, mean_prompt, mean_new,
+                max_prompt=max_prompt, dtype_bytes=dtype_bytes, hw=self.hw)
+            entry = TunerEntry(key=key, mode=d.mode, chunks=d.chunk,
+                               predicted_s=1.0 / max(d.chosen_tok_s,
+                                                     1e-30))
+            self._entries[key] = entry
+        return entry
+
     # -- measurement feedback (iteration k informs iteration k+1) -----------
 
     def record(self, key: str, mode: str, chunks: int,
@@ -160,6 +190,8 @@ class ScheduleTuner:
         candidates = (self.HALO_CANDIDATES if key.startswith("halo")
                       else self.ATTENTION_CANDIDATES
                       if key.startswith("attention")
+                      else self.SERVE_CANDIDATES
+                      if key.startswith("serve")
                       else self.CANDIDATES)
         entry = self._entries.get(key)
         if entry is None:

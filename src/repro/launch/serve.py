@@ -1,7 +1,15 @@
-"""Serving driver CLI (batched greedy decoding).
+"""Serving driver CLI — the managed serving runtime (repro/serve).
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m \
-        --reduced --requests 4 --new-tokens 16
+        --reduced --schedule auto --requests 8 --new-tokens 16
+
+``--schedule static`` reproduces the unmanaged baseline (padded waves =
+the seed Generator); ``continuous`` pins continuous batching;  ``auto``
+lets the managed runtime pick mode + scheduling quantum from the serve
+cost model and correct it online from the measured step latencies.  The
+decision trail (DecisionRecord op="serve_schedule") is printed at the
+end.  Prompt lengths are MIXED by default (--prompt-len down to
+--min-prompt-len) — the workload where continuous batching pays.
 """
 
 from __future__ import annotations
@@ -13,20 +21,27 @@ import jax
 import numpy as np
 
 from repro import configs
-from repro.configs.base import ShapeConfig
+from repro.core import managed
 from repro.models.model import Model
 from repro.parallel.sharding import MeshCtx, infer_shardings
-from repro.train.serve_loop import Generator
+from repro.serve.engine import ServeEngine
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=configs.list_archs())
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--min-prompt-len", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--schedule", default="auto",
+                    choices=("static", "continuous", "auto"))
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="pin the scheduling quantum C")
     ap.add_argument("--mdmp-mode", default="auto")
     args = ap.parse_args()
 
@@ -40,21 +55,35 @@ def main() -> None:
         model.init(jax.random.key(0)),
         infer_shardings(model.param_specs(), mesh))
 
-    shape = ShapeConfig("serve", seq_len=args.max_seq,
-                        global_batch=args.requests, kind="decode")
-    gen = Generator(model, mesh, shape, params)
+    engine = ServeEngine(model, mesh, params, slots=args.slots,
+                         max_seq=args.max_seq, page_size=args.page_size,
+                         schedule=args.schedule, chunk=args.chunk)
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size - 1,
-                           size=(args.requests, args.prompt_len)
-                           ).astype(np.int32)
+    lo = min(args.min_prompt_len, args.prompt_len)
+    plens = rng.integers(lo, args.prompt_len + 1, size=args.requests)
+    rids = [engine.submit(
+        rng.integers(0, cfg.vocab_size - 1, size=int(p)).astype(np.int32),
+        args.new_tokens) for p in plens]
+
     t0 = time.perf_counter()
-    out = gen.generate(prompts, n_new=args.new_tokens)
+    out = engine.run()
     dt = time.perf_counter() - t0
-    total = args.requests * (args.prompt_len + args.new_tokens)
-    print(f"{total} tokens in {dt:.2f}s "
-          f"({total / dt:.1f} tok/s, batch {args.requests})")
-    for i in range(min(args.requests, 4)):
-        print(f"  req{i}: {out[i].tolist()}")
+    total = int(sum(plens)) + args.requests * args.new_tokens
+    s = engine.metrics.summary()
+    print(f"{total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s end-to-end; "
+          f"{s['useful_tok_s']:.1f} useful tok/s, occupancy "
+          f"{s['occupancy']:.2f}, batch {args.slots} slots)")
+    print(f"TTFT {s['mean_ttft_s'] * 1e3:.1f}ms  TPOT "
+          f"{s['mean_tpot_s'] * 1e3:.2f}ms  quanta {s['quanta']}  "
+          f"pages high-water {engine.pt.high_water}/"
+          f"{engine.cache_cfg.n_pages}")
+    for rec in managed.decision_log():
+        if rec.op == "serve_schedule":
+            print(f"decision serve_schedule({rec.mode}, C={rec.chunks}) "
+                  f"pred static={rec.predicted_bulk_s * 1e6:.1f}us/tok "
+                  f"chosen={rec.predicted_interleaved_s * 1e6:.1f}us/tok")
+    for i, r in enumerate(rids[:4]):
+        print(f"  req{i} (P={int(plens[i])}): {out[r].tolist()}")
 
 
 if __name__ == "__main__":

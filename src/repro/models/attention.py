@@ -424,3 +424,96 @@ def attention_decode(x: Array, kv_cache: tuple[Array, Array], pos: Array,
         jnp.dot(o_my.reshape(b, h_loc * hd), params["w_o"]), "model",
         mode=ctx.mdmp_mode)
     return y.astype(x.dtype), (k_cache, v_cache)
+
+
+def attention_decode_paged(x: Array, pool: tuple[Array, Array],
+                           table: Array, pos: Array, active: Array,
+                           params: dict, cfg: ModelConfig, ctx: MeshCtx, *,
+                           window: int = 0
+                           ) -> tuple[Array, tuple[Array, Array]]:
+    """One-token decode attention against a PAGED KV cache (the serving
+    runtime's cache; kernels/paged_attention.py).
+
+    x:      [B, D_loc(data)] — every slot decodes its own token.
+    pool:   (k_pages, v_pages), each [Np_loc, page, KV, hd]; the pool's
+            page dim is sharded over cache_axes(ctx) (rank r owns global
+            page ids [r*Np_loc, (r+1)*Np_loc)).
+    table:  [B, n_pages_max] int32 GLOBAL page ids per slot (replicated).
+    pos:    [B] int32 per-slot positions being written/attended — unlike
+            the contiguous flow the batch rows sit at DIFFERENT positions
+            (continuous batching mixes prefilling and decoding slots).
+    active: [B] bool — inactive slots neither write the cache nor count;
+            their outputs are garbage the engine discards.
+    Returns (y [B, D_loc(data)], updated pool).
+    """
+    b = x.shape[0]
+    tp = ctx.tp
+    h = cfg.padded_heads
+    h_loc = h // tp
+    kvh = padded_kv_heads(cfg)
+    hd = cfg.head_dim
+    k_pages, v_pages = pool
+    np_loc, page = k_pages.shape[0], k_pages.shape[1]
+
+    qkv = managed.managed_all_reduce(
+        jnp.concatenate([jnp.dot(x, params["w_q"]),
+                         jnp.dot(x, params["w_kv"])], axis=-1),
+        "data", mode=ctx.mdmp_mode)
+    q, knew, vnew = jnp.split(qkv, [h_loc * hd, h_loc * hd + kvh * hd],
+                              axis=-1)
+    q = q.reshape(b, h_loc, hd)
+    knew = knew.reshape(b, kvh, hd)
+    vnew = vnew.reshape(b, kvh, hd)
+
+    if cfg.rope_theta > 0:
+        q = layers.apply_rope_slots(q, pos, cfg.rope_theta)
+        knew = layers.apply_rope_slots(knew, pos, cfg.rope_theta)
+
+    # Cache write: slot b's position ``pos[b]`` lives in pool page
+    # table[b, pos[b] // page], row pos[b] % page.  Only the owning rank
+    # writes; inactive or foreign writes are routed to an out-of-range
+    # local index and dropped by the scatter.
+    me = _cache_rank(ctx)
+    gpid = jnp.take_along_axis(table.astype(jnp.int32),
+                               (pos // page)[:, None], axis=1)[:, 0]
+    lp = gpid - me * np_loc
+    writable = active & (lp >= 0) & (lp < np_loc)
+    lp_safe = jnp.where(writable, lp, np_loc)
+    row = pos % page
+    k_pages = k_pages.at[lp_safe, row].set(knew.astype(k_pages.dtype),
+                                           mode="drop")
+    v_pages = v_pages.at[lp_safe, row].set(vnew.astype(v_pages.dtype),
+                                           mode="drop")
+
+    # All heads everywhere (tiny), paged partials on the local pool slice,
+    # then the distributed flash-decoding LSE merge over the cache axes.
+    q_all = managed.managed_all_gather(
+        q.transpose(1, 0, 2), "model", mode=ctx.mdmp_mode)  # [H, B, hd]
+    q_all = q_all.transpose(1, 0, 2)                        # [B, H, hd]
+    lens = jnp.where(active, pos + 1, 0).astype(jnp.int32)
+
+    from repro.kernels import paged_attention as paged
+    n_sh = cache_shards(ctx)
+    if n_sh == 1 and paged.paged_kernel_enabled():
+        o = paged.paged_attention(q_all, k_pages, v_pages, table, lens,
+                                  window=window)
+    else:
+        m, l, acc = paged.paged_attention_partials_jnp(
+            q_all, k_pages, v_pages, table, lens, window=window,
+            pool_offset=me * np_loc)
+        m_glob = lax.pmax(m, cache_axes(ctx))
+        w = jnp.exp(m - m_glob)
+        l = l * w
+        acc = acc * w[..., None]
+        for ax in cache_axes(ctx):
+            l = managed.managed_all_reduce(l, ax)
+            acc = managed.managed_all_reduce(acc, ax)
+        o = (acc / jnp.maximum(l[..., None], 1e-30))[:, 0]
+    o = o.reshape(b, h, hd).astype(x.dtype)
+
+    r_m = lax.axis_index("model")
+    o_my = lax.dynamic_slice_in_dim(o, r_m * h_loc, h_loc, axis=1)
+    y = managed.managed_all_reduce(
+        jnp.dot(o_my.reshape(b, h_loc * hd), params["w_o"]), "model",
+        mode=ctx.mdmp_mode)
+    return y.astype(x.dtype), (k_pages, v_pages)

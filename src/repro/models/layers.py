@@ -272,6 +272,14 @@ def rope_freqs(head_dim: int, theta: float) -> Array:
                                        dtype=jnp.float32) / head_dim))
 
 
+def apply_rope_slots(x: Array, positions: Array, theta: float) -> Array:
+    """Per-slot RoPE for the serving decode flow: every batch row sits at
+    its OWN position.  x: [B, H, hd]; positions: [B] int32.  The batch
+    axis plays apply_rope's position axis, so this is exactly the same
+    rotation — no second copy of the formula to keep in sync."""
+    return apply_rope(x[None], positions, theta)[0]
+
+
 def apply_rope(x: Array, positions: Array, theta: float) -> Array:
     """x: [B, S, H, hd]; positions: [S] (global positions)."""
     hd = x.shape[-1]

@@ -354,6 +354,33 @@ class Model:
         nxt = layers.greedy_sample(logits, ctx)
         return nxt, new_cache
 
+    def decode_step_paged(self, params: dict, cache: Any, table: Array,
+                          token: Array, pos: Array, active: Array
+                          ) -> tuple[Array, Any]:
+        """One greedy decode step against the PAGED cache (the serving
+        runtime's flow).  token: [B] int32 (replicated); table: [B, Pmax]
+        int32 global page ids; pos: [B] int32 per-slot positions; active:
+        [B] bool.  Returns (next_token [B], new cache) — outputs of
+        inactive slots are garbage the engine discards, and their cache
+        state does not advance."""
+        cfg, ctx = self.cfg, self.ctx
+        x = layers.embed_decode(token, params["embed"], cfg, ctx)
+        d_loc = cfg.d_model // ctx.dp
+        r_d = lax.axis_index("data")
+
+        x, new_cache = transformer.stack_decode_paged(
+            x, params["layers"], cache, table, pos, active, cfg, ctx)
+        ln = lax.dynamic_slice_in_dim(params["final_ln"], r_d * d_loc,
+                                      d_loc, axis=0)
+        x = layers.rms_norm_sharded(x, ln, cfg.norm_eps, "data")
+        if cfg.tie_embeddings:
+            logits = managed.managed_all_reduce(
+                jnp.dot(x, params["embed"].T), "data", mode=ctx.mdmp_mode)
+        else:
+            logits = layers.logits_decode(x, params["unembed"], ctx)
+        nxt = layers.greedy_sample(logits, ctx)
+        return nxt, new_cache
+
     # ------------------------------------------------------------------
     # Decode-cache construction (decode layout; used by serve + dry-run)
     # ------------------------------------------------------------------
@@ -409,6 +436,78 @@ class Model:
                 f = pad_to_multiple(cfg.encoder.n_frames, n_sh)
                 entry["xk"] = kv_entry(f)
                 entry["xv"] = kv_entry(f)
+            return entry
+
+        if self.scan_layers:
+            entry = layer_entry(0)
+            out_sds = jax.tree.map(
+                lambda e: jax.ShapeDtypeStruct(
+                    (cfg.n_layers,) + e[0].shape, e[0].dtype),
+                entry, is_leaf=lambda x: isinstance(x, tuple))
+            out_specs = jax.tree.map(
+                lambda e: P(None, *e[1]), entry,
+                is_leaf=lambda x: isinstance(x, tuple))
+            return out_sds, out_specs
+        sds, specs = [], []
+        for i in range(cfg.n_layers):
+            e = layer_entry(i)
+            sds.append(jax.tree.map(lambda t: t[0], e,
+                                    is_leaf=lambda x: isinstance(x, tuple)))
+            specs.append(jax.tree.map(lambda t: t[1], e,
+                                      is_leaf=lambda x: isinstance(x, tuple)))
+        return sds, specs
+
+
+    # ------------------------------------------------------------------
+    # Paged-cache construction (serving runtime; repro/serve)
+    # ------------------------------------------------------------------
+
+    def paged_cache_specs(self, slots: int, n_pages: int, page_size: int
+                          ) -> tuple[Any, Any]:
+        """Returns (ShapeDtypeStruct pytree, PartitionSpec pytree) for the
+        paged serving cache: per-layer page POOLS [n_pages, page, KV, hd]
+        (the page dim sharded over the cache axes — rank r owns global
+        page ids [r*Np_loc, (r+1)*Np_loc)) plus slot-indexed SSM states.
+        Unlike ``decode_cache_specs`` nothing scales with max_seq: memory
+        is pages actually allocated, and completed sequences recycle their
+        pages through the free list (serve/kv_cache.py)."""
+        cfg, ctx = self.cfg, self.ctx
+        n_sh = attention.cache_shards(ctx)
+        assert n_pages % n_sh == 0, (n_pages, n_sh)
+        assert cfg.encoder is None and cfg.vision is None, \
+            "paged serving supports token-only decoders"
+        sax = (("pod", "data", "model") if ctx.has_pod else
+               ("data", "model"))
+        dt = jnp.dtype(cfg.dtype)
+        kvp = attention.padded_kv_heads(cfg) if cfg.n_heads else 0
+        hd = cfg.head_dim if cfg.n_heads else 0
+
+        def pool_entry():
+            shp = (n_pages, page_size, kvp, hd)
+            return (jax.ShapeDtypeStruct(shp, dt), P(sax, None, None, None))
+
+        def ssm_entry():
+            s = cfg.ssm
+            di = cfg.ssm_heads * s.headdim
+            hshp = (slots, cfg.ssm_heads, s.headdim, s.d_state)
+            cx = (jax.ShapeDtypeStruct((slots, s.d_conv - 1, di), dt),
+                  P(None, None, "model"))
+            cbc = (jax.ShapeDtypeStruct((slots, s.d_conv - 1,
+                                         2 * s.d_state), dt),
+                   P(None, None, None))
+            return ((jax.ShapeDtypeStruct(hshp, jnp.float32),
+                     P(None, "model", None, None)), cx, cbc)
+
+        def layer_entry(i):
+            entry = {}
+            if cfg.family != "ssm" and cfg.n_heads:
+                entry["kp"] = pool_entry()
+                entry["vp"] = pool_entry()
+            if cfg.family in ("ssm", "hybrid"):
+                h_e, cx, cbc = ssm_entry()
+                entry["ssm_h"] = h_e
+                entry["ssm_conv_x"] = cx
+                entry["ssm_conv_bc"] = cbc
             return entry
 
         if self.scan_layers:

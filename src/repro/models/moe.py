@@ -52,13 +52,16 @@ def _router(x: Array, w_router: Array, n_experts: int, top_k: int
 
 
 def dispatch_indices(top_idx: Array, n_experts: int, capacity: int
-                     ) -> tuple[Array, Array, Array]:
+                     ) -> tuple[Array, Array, Array, Array]:
     """Capacity-limited dispatch bookkeeping (index-based).
 
     top_idx: [T, K] expert ids.  Returns
       dest  [T*K] slot in the [E*C] buffer (or E*C for dropped entries),
       tok   [T*K] source token of each (t, k) entry in expert-sorted order,
-      keep  [T*K] 1.0 where the entry fit under capacity.
+      keep  [T*K] 1.0 where the entry fit under capacity,
+      order [T*K] the expert-major argsort permuting flat (t, k) entries
+            into the order of the three arrays above (combine_from_buffers
+            uses it to align the gate weights).
     """
     t, k = top_idx.shape
     flat_e = top_idx.reshape(t * k)

@@ -287,6 +287,103 @@ def cross_block_decode(x: Array, p: dict, enc_kv: tuple, cfg: ModelConfig,
     return x + y.astype(x.dtype)
 
 
+def _mask_state(new: Any, old: Any, active: Array) -> Any:
+    """Keep ``old`` state leaves for inactive slots (leading dim = B)."""
+    def sel(n, o):
+        act = active.reshape((-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(act, n, o)
+    return jax.tree.map(sel, new, old)
+
+
+_SSM_KEYS = ("ssm_h", "ssm_conv_x", "ssm_conv_bc")
+
+
+def _ssm_state_paged(state: dict, pos: Array, active: Array) -> dict:
+    """Slot-reuse hygiene: a slot stepping at pos 0 is starting a NEW
+    request, so its carried SSM state (from the slot's previous occupant)
+    is replaced with the zero init.  KV pages need no reset — attention
+    masks every position beyond the slot's lens."""
+    fresh = active & (pos == 0)
+    def z(leaf):
+        f = fresh.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.where(f, jnp.zeros_like(leaf), leaf)
+    return {k: z(state[k]) for k in _SSM_KEYS}
+
+
+def block_decode_paged(x: Array, p: dict, state: dict, table: Array,
+                       pos: Array, active: Array, cfg: ModelConfig,
+                       ctx: MeshCtx, *, window) -> tuple:
+    """One-token decode block against the PAGED cache (serving runtime).
+    ``state`` holds ("kp", "vp") page pools instead of ("k", "v") slabs;
+    ``pos``/``active`` are per-slot [B] (continuous batching mixes slots
+    at different positions).  SSM states are slot-indexed as before but
+    masked so inactive slots don't advance and reused slots start from
+    the zero init.  Returns (x, new_state)."""
+    new_state = dict(state)
+
+    if cfg.family == "ssm":
+        h = layers.rms_norm_sharded(x, _ln_loc(p["ln1"], ctx), cfg.norm_eps,
+                                    "data")
+        ssm_in = _ssm_state_paged(state, pos, active)
+        y, hs, cx, cbc = _ssm_decode(h, p, ssm_in, cfg, ctx)
+        upd = _mask_state({"ssm_h": hs, "ssm_conv_x": cx,
+                           "ssm_conv_bc": cbc},
+                          {k: state[k] for k in _SSM_KEYS}, active)
+        new_state.update(upd)
+        return x + y, new_state
+
+    h = layers.rms_norm_sharded(x, _ln_loc(p["ln1"], ctx), cfg.norm_eps,
+                                "data")
+    att, (kp, vp) = attention.attention_decode_paged(
+        h, (state["kp"], state["vp"]), table, pos, active, p, cfg, ctx,
+        window=window)
+    new_state["kp"], new_state["vp"] = kp, vp
+    if cfg.family == "hybrid":
+        ssm_in = _ssm_state_paged(state, pos, active)
+        y_ssm, hs, cx, cbc = _ssm_decode(h, p["ssm"], ssm_in, cfg, ctx)
+        upd = _mask_state({"ssm_h": hs, "ssm_conv_x": cx,
+                           "ssm_conv_bc": cbc},
+                          {k: state[k] for k in _SSM_KEYS}, active)
+        new_state.update(upd)
+        x = x + 0.5 * (att + y_ssm)
+    else:
+        x = x + att
+
+    h2 = layers.rms_norm_sharded(x, _ln_loc(p["ln2"], ctx), cfg.norm_eps,
+                                 "data")
+    if cfg.family == "moe":
+        y = moe.moe_block_decode(h2, p, cfg, ctx)
+    else:
+        y = layers.mlp_block_decode(h2, p, cfg, ctx)
+    return x + y, new_state
+
+
+def stack_decode_paged(x: Array, stacked: dict, cache, table: Array,
+                       pos: Array, active: Array, cfg: ModelConfig,
+                       ctx: MeshCtx) -> tuple[Array, Any]:
+    """Paged-cache decode over layers; mirrors ``stack_decode`` (scanned
+    when cache leaves carry a leading [L], unrolled for hybrid archs)."""
+    if isinstance(stacked, (list, tuple)):
+        new_cache = []
+        for i, (p, state) in enumerate(zip(stacked, cache)):
+            x, st = block_decode_paged(x, p, state, table, pos, active,
+                                       cfg, ctx, window=layer_window(cfg, i))
+            new_cache.append(st)
+        return x, new_cache
+
+    window = cfg.sliding_window   # uniform across scanned layers
+
+    def body(carry, xs):
+        xc = carry
+        p, state = xs
+        xc, new_state = block_decode_paged(xc, p, state, table, pos,
+                                           active, cfg, ctx, window=window)
+        return xc, new_state
+
+    x, new_cache = lax.scan(body, x, (stacked, cache))
+    return x, new_cache
+
+
 def stack_decode(x: Array, stacked: dict, cache, pos: Array,
                  cfg: ModelConfig, ctx: MeshCtx) -> tuple[Array, Any]:
     """Decode blocks over layers.  Scanned (cache leaves [L, ...]) or

@@ -1,0 +1,12 @@
+"""Managed serving runtime: continuous batching over a paged KV cache.
+
+The MDMP loop applied to serving: the scheduler's batching decisions are
+the declared "messages", serve/metrics.py's step-latency counters are the
+runtime instrumentation, and core/cost_model.py::decide_serve_schedule
+turns iteration-k measurements into the iteration-(k+1) schedule.
+"""
+
+from repro.serve.engine import ServeEngine                    # noqa: F401
+from repro.serve.kv_cache import PagedCacheConfig, PageTable  # noqa: F401
+from repro.serve.metrics import ServeMetrics                  # noqa: F401
+from repro.serve.scheduler import Request, ServeScheduler     # noqa: F401

@@ -1,0 +1,229 @@
+"""Serving engine — the jitted step loop over the paged cache.
+
+One dispatched call advances every decode slot by up to C tokens
+(``lax.scan`` over ``Model.decode_step_paged``): slots still inside their
+prompt consume prompt tokens (chunked prefill), slots past it feed their
+own last sample back (decode).  C — the scheduling quantum — is the
+managed knob: it amortises the per-dispatch overhead (the alpha of this
+decision) against scheduling granularity (admission + retirement only
+happen at quantum boundaries), and is chosen by
+``managed.resolve_serve_schedule`` from the serve cost model, then
+corrected online from serve/metrics.py's measured step latencies —
+MDMP's iteration-(k)->(k+1) loop on the serving path.
+
+The cache is the paged pool of serve/kv_cache.py: per-layer page pools
+sharded over the cache axes, one host-side page table, pages recycled
+through the free list as requests retire.  Works for every token-only
+decoder family (dense / moe / ssm / hybrid — SSM state is slot-indexed
+and masked, so "paging" degenerates to slot reuse there).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.model import Model
+from repro.parallel.sharding import smap, spec_pspecs
+from repro.serve.kv_cache import PagedCacheConfig, PageTable
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import Request, ServeScheduler
+
+Array = jax.Array
+
+
+def build_paged_step(model: Model, mesh: Mesh, cache_pspecs: Any,
+                     chunk: int):
+    """Jitted quantum: (params, cache, table [B, Pmax], tokens [B, C],
+    n_in [B], pos0 [B], steps [B]) -> (sampled [B, C], new cache).
+
+    Inner scan step t feeds slot b ``tokens[b, t]`` while t < n_in[b]
+    (prompt/chain seed) and its own previous sample afterwards; slots
+    with t >= steps[b] are inactive (no cache write, no position
+    advance)."""
+    pspecs = spec_pspecs(model.param_specs())
+
+    def body(params, cache, table, tokens, n_in, pos0, steps):
+        def inner(carry, xs):
+            cache_c, pos, last = carry
+            t, tok_col = xs
+            tok = jnp.where(t < n_in, tok_col, last)
+            act = t < steps
+            nxt, cache_c = model.decode_step_paged(
+                params, cache_c, table, tok, pos, act)
+            pos = pos + act.astype(jnp.int32)
+            last = jnp.where(act, nxt, last)
+            return (cache_c, pos, last), nxt
+
+        init = (cache, pos0, tokens[:, 0])
+        (cache, _, _), outs = lax.scan(
+            inner, init, (jnp.arange(chunk), tokens.T))
+        return outs.T, cache
+
+    sharded = smap(
+        body, mesh,
+        in_specs=(pspecs, cache_pspecs, P(None, None), P(None, None),
+                  P(None), P(None), P(None)),
+        out_specs=(P(None, None), cache_pspecs))
+    return jax.jit(sharded, donate_argnums=(1,))
+
+
+class ServeEngine:
+    """Continuous-batching serving loop over the paged cache."""
+
+    def __init__(self, model: Model, mesh: Mesh, params: Any, *,
+                 slots: int = 4, max_seq: int = 256, page_size: int = 8,
+                 n_pages: int | None = None, schedule: str = "auto",
+                 chunk: int | None = None,
+                 metrics: ServeMetrics | None = None, tuner: Any = None):
+        from repro.models import attention
+        self.model = model
+        self.mesh = mesh
+        self.params = params
+        self.slots = slots
+        n_sh = attention.cache_shards(model.ctx)
+        pages_per_seq = max(1, math.ceil(max_seq / page_size))
+        if n_pages is None:
+            n_pages = slots * pages_per_seq
+        n_pages = ((n_pages + n_sh - 1) // n_sh) * n_sh
+        self.cache_cfg = PagedCacheConfig(
+            slots=slots, page_size=page_size, n_pages=n_pages,
+            max_pages_per_seq=pages_per_seq)
+        self.pt = PageTable(self.cache_cfg)
+        self.metrics = metrics or ServeMetrics()
+        self.scheduler = ServeScheduler(slots, schedule=schedule,
+                                        chunk=chunk, tuner=tuner)
+        self._schedule = schedule
+        self._n_params = model.cfg.param_count()
+        self._dtype_bytes = jnp.dtype(model.cfg.dtype).itemsize
+        self._cache_sds, self._cache_pspecs = model.paged_cache_specs(
+            slots, n_pages, page_size)
+        self._steps: dict[int, Any] = {}      # chunk -> jitted quantum
+        self._rid = 0
+        self._retuned = False
+        self._variant_q0 = 0      # quanta index of the variant's window
+        self.cache = self._empty_cache()
+
+    # -- device state --------------------------------------------------------
+
+    def _empty_cache(self) -> Any:
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), self._cache_pspecs)
+        return jax.tree.map(
+            lambda sds, sh: jax.device_put(
+                jnp.zeros(sds.shape, sds.dtype), sh),
+            self._cache_sds, shardings)
+
+    def _step_fn(self, chunk: int):
+        fn = self._steps.get(chunk)
+        if fn is None:
+            fn = build_paged_step(self.model, self.mesh,
+                                  self._cache_pspecs, chunk)
+            self._steps[chunk] = fn
+        return fn
+
+    def warmup(self, chunk: int) -> None:
+        """Compile the quantum function outside the measured loop (a
+        zero-step quantum touches no state)."""
+        zeros = np.zeros(self.slots, np.int32)
+        out, self.cache = self._step_fn(chunk)(
+            self.params, self.cache, jnp.asarray(self.pt.table),
+            jnp.zeros((self.slots, chunk), jnp.int32),
+            jnp.asarray(np.ones(self.slots, np.int32)),
+            jnp.asarray(zeros), jnp.asarray(zeros))
+        jax.block_until_ready(out)
+
+    # -- queue ---------------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new: int) -> int:
+        rid = self._rid
+        self._rid += 1
+        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32).ravel(),
+                      max_new=int(max_new))
+        assert len(req.prompt) + req.max_new <= \
+            self.cache_cfg.max_pages_per_seq * self.cache_cfg.page_size, \
+            f"request {rid} exceeds max_seq"
+        self.scheduler.submit(req, self.metrics)
+        return rid
+
+    # -- the step loop -------------------------------------------------------
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Serve the queue to completion; returns rid -> generated tokens.
+        The schedule decision (and any online correction) is visible in
+        ``managed.decision_log()`` as ``op="serve_schedule"`` records."""
+        sch = self.scheduler
+        if not sch.has_work():
+            return {}
+        sch.decide(self._n_params, self._dtype_bytes,
+                   dtype_str=self.model.cfg.dtype)
+        self.warmup(sch.chunk)
+        # compilation is over: TTFT measures serving from here, and the
+        # running variant's measurement window starts empty
+        self.metrics.rebase_pending()
+        self._variant_q0 = len(self.metrics.quanta)
+        results: dict[int, np.ndarray] = {}
+        while sch.has_work():
+            sch.admit(self.pt)
+            plan = sch.plan_quantum(sch.chunk)
+            if int(plan.steps.sum()) == 0:
+                # admit() ran just above with an empty batch and still
+                # produced nothing: the head request can never fit
+                raise RuntimeError(
+                    "serve queue stalled: request exceeds the page pool "
+                    f"({self.cache_cfg})")
+            for slot, rs in sch.active.items():
+                self.pt.ensure(slot,
+                               rs.consumed + int(plan.steps[slot]))
+            t0 = time.perf_counter()
+            out, self.cache = self._step_fn(plan.chunk)(
+                self.params, self.cache, jnp.asarray(self.pt.table),
+                jnp.asarray(plan.tokens), jnp.asarray(plan.n_in),
+                jnp.asarray(plan.pos), jnp.asarray(plan.steps))
+            out_np = np.asarray(out)
+            wall = time.perf_counter() - t0
+            self.metrics.note_quantum(wall, plan.chunk,
+                                      int(plan.steps.sum()), self.slots)
+            for rs in sch.complete_quantum(plan, out_np, self.pt,
+                                           self.metrics):
+                results[rs.req.rid] = np.asarray(rs.generated, np.int32)
+            prev = (sch.mode, sch.chunk)
+            self._maybe_retune()
+            if sch.has_work() and (sch.mode, sch.chunk) != prev:
+                # the correction changed the schedule: compile the new
+                # quantum OUTSIDE the measured loop, keep the compile out
+                # of still-queued requests' TTFT, and start a fresh
+                # measurement window for the new variant
+                self.warmup(sch.chunk)
+                self.metrics.rebase_pending()
+                self._variant_q0 = len(self.metrics.quanta)
+        return results
+
+    def _maybe_retune(self) -> None:
+        """The iteration-(k)->(k+1) correction: once enough quanta are
+        measured, re-resolve the schedule with the observed step/dispatch
+        seconds, and feed the running variant's measured seconds-per-token
+        to the tuner (so a persisted winner survives restarts).  The
+        variant is only credited with quanta from its OWN measurement
+        window (``_variant_q0``) — cumulative throughput would attribute
+        the previous variant's behaviour to the current one."""
+        sch = self.scheduler
+        tok_s = self.metrics.useful_tokens_per_s(since=self._variant_q0)
+        if sch.tuner is not None and sch.tuner_key and tok_s > 0:
+            sch.tuner.record(sch.tuner_key, sch.mode, sch.chunk,
+                             1.0 / tok_s)
+        if self._schedule != "auto" or self._retuned \
+                or len(self.metrics.quanta) < 3:
+            return
+        self._retuned = True
+        sch.decide(self._n_params, self._dtype_bytes,
+                   dtype_str=self.model.cfg.dtype,
+                   measured_step_s=self.metrics.step_s_estimate(),
+                   measured_dispatch_s=self.metrics.dispatch_s_estimate())

@@ -1,0 +1,83 @@
+"""Paged KV cache bookkeeping — host-side page tables + free-list.
+
+The device side is a per-layer page POOL ([n_pages, page, KV, hd];
+models/model.py::paged_cache_specs shards the page dim over the cache
+axes).  This module owns the host side: which pool pages belong to which
+decode slot, in order.  Allocation is on-demand (a page is claimed the
+first time a slot's position crosses a page boundary) and completed
+sequences return their whole chain to the free list, so pool memory
+tracks the tokens actually resident — the contiguous decode cache it
+replaces reserved ``slots * max_seq`` up front regardless of occupancy.
+
+Unused table entries keep page id 0: the attention engines mask every
+position beyond ``lens`` (kernels/paged_attention.py), so a dangling id
+only has to be in range for the gather, never correct.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    slots: int                 # decode slots (batch rows)
+    page_size: int             # tokens per page
+    n_pages: int               # pool pages (global, across cache shards)
+    max_pages_per_seq: int     # table width (= ceil(max_seq / page_size))
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return max(0, math.ceil(n_tokens / self.page_size))
+
+
+class PageTable:
+    """Free-list page allocator + per-slot page chains."""
+
+    def __init__(self, cfg: PagedCacheConfig):
+        self.cfg = cfg
+        # pop() hands out low page ids first (keeps early traffic on the
+        # first cache shards — nice for eyeballing dumps, not load-bearing)
+        self._free = list(range(cfg.n_pages - 1, -1, -1))
+        self._owned: list[list[int]] = [[] for _ in range(cfg.slots)]
+        self.table = np.zeros((cfg.slots, cfg.max_pages_per_seq), np.int32)
+        self.high_water = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.cfg.n_pages - len(self._free)
+
+    def pages_held(self, slot: int) -> int:
+        return len(self._owned[slot])
+
+    def can_fit(self, n_tokens: int) -> bool:
+        return self.cfg.pages_needed(n_tokens) <= len(self._free)
+
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        """Grow slot's chain to cover ``n_tokens`` positions."""
+        need = self.cfg.pages_needed(n_tokens)
+        assert need <= self.cfg.max_pages_per_seq, (
+            f"slot {slot}: {n_tokens} tokens exceed the "
+            f"{self.cfg.max_pages_per_seq}-page table")
+        chain = self._owned[slot]
+        while len(chain) < need:
+            assert self._free, "page pool exhausted (admission bug)"
+            pid = self._free.pop()
+            self.table[slot, len(chain)] = pid
+            chain.append(pid)
+        self.high_water = max(self.high_water, self.pages_in_use)
+
+    def release(self, slot: int) -> int:
+        """Return slot's whole chain to the free list."""
+        chain = self._owned[slot]
+        n = len(chain)
+        self._free.extend(reversed(chain))
+        self._owned[slot] = []
+        self.table[slot, :] = 0
+        return n

@@ -1,0 +1,139 @@
+"""Serving instrumentation — the runtime counters the scheduler plans from.
+
+MDMP's contract is that iteration k's measured behaviour schedules
+iteration k+1.  For serving the "iteration" is one dispatched quantum of
+C engine steps: every quantum records its wall clock and how many
+slot-steps did useful work, and the per-request traces record TTFT/TPOT.
+``step_s_estimate`` / ``dispatch_s_estimate`` invert the quantum model
+``wall = dispatch + C * step`` from those records; the scheduler feeds
+them back into ``cost_model.decide_serve_schedule`` (via
+``managed.resolve_serve_schedule(measured_*)``) to correct the modeled
+roofline terms online.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    rid: int
+    submit_s: float
+    n_prompt: int
+    n_new: int
+    first_token_s: float | None = None
+    done_s: float | None = None
+    generated: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantumRecord:
+    wall_s: float
+    chunk: int               # C — engine steps dispatched per slot
+    useful_steps: int        # sum over slots of steps that advanced a slot
+    slots: int
+
+
+class ServeMetrics:
+    def __init__(self):
+        self._t0 = time.perf_counter()
+        self.quanta: list[QuantumRecord] = []
+        self.traces: dict[int, RequestTrace] = {}
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    # -- recording -----------------------------------------------------------
+
+    def on_submit(self, rid: int, n_prompt: int, n_new: int) -> None:
+        self.traces[rid] = RequestTrace(rid=rid, submit_s=self.now(),
+                                        n_prompt=n_prompt, n_new=n_new)
+
+    def on_first_token(self, rid: int) -> None:
+        t = self.traces[rid]
+        if t.first_token_s is None:
+            t.first_token_s = self.now()
+
+    def on_generated(self, rid: int, n: int = 1) -> None:
+        self.traces[rid].generated += n
+
+    def on_done(self, rid: int) -> None:
+        self.traces[rid].done_s = self.now()
+
+    def note_quantum(self, wall_s: float, chunk: int, useful_steps: int,
+                     slots: int) -> None:
+        self.quanta.append(QuantumRecord(wall_s, chunk, useful_steps,
+                                         slots))
+
+    def rebase_pending(self) -> None:
+        """Move not-yet-served requests' submit times to 'now' — called
+        after jit warmup so TTFT measures scheduling, not compilation."""
+        now = self.now()
+        for t in self.traces.values():
+            if t.first_token_s is None:
+                t.submit_s = max(t.submit_s, now)
+
+    # -- estimates fed back into the cost model ------------------------------
+
+    def step_s_estimate(self) -> float | None:
+        """Per-engine-step seconds (whole batch): min over quanta of
+        wall/C — the min is the noise-robust estimator on a shared host
+        and absorbs the least dispatch overhead."""
+        if not self.quanta:
+            return None
+        return min(q.wall_s / max(1, q.chunk) for q in self.quanta)
+
+    def dispatch_s_estimate(self) -> float | None:
+        """Per-quantum overhead left after charging C * step_s."""
+        step = self.step_s_estimate()
+        if step is None or len(self.quanta) < 2:
+            return None
+        rest = sorted(max(0.0, q.wall_s - q.chunk * step)
+                      for q in self.quanta)
+        return rest[len(rest) // 2]
+
+    # -- aggregates ----------------------------------------------------------
+
+    def useful_tokens_per_s(self, since: int = 0) -> float:
+        """Useful slot-steps per wall second over ``quanta[since:]`` —
+        pass the index where the current schedule variant started so a
+        variant is only credited with its own quanta."""
+        window = self.quanta[since:]
+        wall = sum(q.wall_s for q in window)
+        if wall <= 0:
+            return 0.0
+        return sum(q.useful_steps for q in window) / wall
+
+    def occupancy(self) -> float:
+        denom = sum(q.chunk * q.slots for q in self.quanta)
+        if denom <= 0:
+            return 0.0
+        return sum(q.useful_steps for q in self.quanta) / denom
+
+    def ttft_s(self) -> list[float]:
+        return [t.first_token_s - t.submit_s for t in self.traces.values()
+                if t.first_token_s is not None]
+
+    def tpot_s(self) -> list[float]:
+        out = []
+        for t in self.traces.values():
+            if t.done_s is not None and t.first_token_s is not None \
+                    and t.generated > 1:
+                out.append((t.done_s - t.first_token_s)
+                           / (t.generated - 1))
+        return out
+
+    def summary(self) -> dict:
+        ttft = self.ttft_s()
+        tpot = self.tpot_s()
+        return {
+            "quanta": len(self.quanta),
+            "useful_tok_s": self.useful_tokens_per_s(),
+            "occupancy": self.occupancy(),
+            "mean_ttft_s": sum(ttft) / len(ttft) if ttft else 0.0,
+            "mean_tpot_s": sum(tpot) / len(tpot) if tpot else 0.0,
+            "step_s": self.step_s_estimate() or 0.0,
+            "dispatch_s": self.dispatch_s_estimate() or 0.0,
+        }

@@ -1,0 +1,220 @@
+"""Continuous-batching scheduler — admission, quantum planning, retirement.
+
+Pure host logic (numpy only): the engine owns the device arrays, the
+scheduler decides WHAT each quantum does.  Every engine step advances
+each active slot by one token — a slot still consuming its prompt is
+"chunked prefill" (its inputs come from the prompt), a slot past the
+prompt is decoding (its input is its own last sample) — so the
+prefill:decode mix of a step is exactly the mix of slot phases, and the
+scheduler controls it through admission.
+
+The managed knobs (batching mode + scheduling quantum C) come from
+``managed.resolve_serve_schedule``: seeded from the alpha-beta serve
+model, re-resolved mid-run with the measured step/dispatch seconds from
+serve/metrics.py, optionally pinned by a ``ScheduleTuner`` measured
+winner.  Every resolve lands in the MDMP decision log
+(``DecisionRecord(op="serve_schedule")``).
+
+  static      — admit a wave, run it to completion, admit the next wave
+                (the unmanaged baseline = the seed Generator's behaviour:
+                every request pads to the wave's longest).
+  continuous  — refill freed slots from the queue at every quantum
+                boundary; pages released by finished requests are reused
+                immediately (kv_cache.py free list).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import numpy as np
+
+from repro.core import managed
+from repro.serve.kv_cache import PageTable
+from repro.serve.metrics import ServeMetrics
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    prompt: np.ndarray            # [P] int32
+    max_new: int
+
+    @property
+    def total_steps(self) -> int:
+        """Engine steps to finish: feed P prompt tokens, sample max_new
+        (the P-th input's output is the first generated token)."""
+        return len(self.prompt) + self.max_new - 1
+
+
+@dataclasses.dataclass
+class RequestState:
+    req: Request
+    slot: int
+    consumed: int = 0             # engine steps done (= cache positions)
+    last_out: int = 0             # last sampled token (chain seed)
+    generated: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.consumed >= self.req.total_steps
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantumPlan:
+    """Device inputs for one dispatched quantum of C engine steps."""
+    tokens: np.ndarray            # [slots, C] int32 input-token buffer
+    n_in: np.ndarray              # [slots] provided input tokens (>= 1)
+    pos: np.ndarray               # [slots] starting positions
+    steps: np.ndarray             # [slots] valid steps this quantum
+    chunk: int
+
+
+class ServeScheduler:
+    def __init__(self, slots: int, *, schedule: str = "auto",
+                 chunk: int | None = None, tuner: Any = None,
+                 axis_name: str = "serve"):
+        assert schedule in ("auto", "static", "continuous"), schedule
+        self.slots = slots
+        self.schedule = schedule
+        self._pinned_chunk = chunk
+        self.tuner = tuner
+        self.axis_name = axis_name
+        self.pending: deque[Request] = deque()
+        self.active: dict[int, RequestState] = {}
+        self._free_slots = list(range(slots - 1, -1, -1))
+        self._committed_pages = 0
+        self.mode: str | None = None
+        self.chunk: int | None = None
+        self.decision = None
+        self.tuner_key: str | None = None
+
+    # -- the managed decision ------------------------------------------------
+
+    def decide(self, n_params: int, dtype_bytes: int, *,
+               dtype_str: str = "bfloat16",
+               measured_step_s: float | None = None,
+               measured_dispatch_s: float | None = None) -> None:
+        """(Re-)resolve the batching mode and quantum from the queue's
+        statistics — seeded from the cost model, corrected by measured
+        step latencies, logged in the MDMP decision trail."""
+        reqs = list(self.pending) + [s.req for s in self.active.values()]
+        if not reqs:
+            return
+        prompts = [len(r.prompt) for r in reqs]
+        news = [r.max_new for r in reqs]
+        pin_mode = None if self.schedule == "auto" else self.schedule
+        pin_chunk = self._pinned_chunk
+        if self.tuner is not None:
+            entry = self.tuner.decide_serve(
+                self.slots, int(np.mean(prompts)), int(np.mean(news)),
+                int(n_params), dtype_str=dtype_str,
+                dtype_bytes=dtype_bytes, max_prompt=int(np.max(prompts)))
+            self.tuner_key = entry.key
+            if pin_mode is None and len(entry.measured_s) >= 2:
+                # a measured COMPARISON (>= 2 variants trialled) overrides
+                # the model seed; one measurement is just the status quo
+                # and must not lock out the online correction
+                pin_mode = entry.mode
+                if pin_chunk is None:
+                    pin_chunk = entry.chunks
+        self.decision = managed.resolve_serve_schedule(
+            self.axis_name, self.slots, float(np.mean(prompts)),
+            float(np.mean(news)), float(n_params),
+            dtype_bytes=dtype_bytes, max_prompt=float(np.max(prompts)),
+            measured_step_s=measured_step_s,
+            measured_dispatch_s=measured_dispatch_s,
+            schedule=pin_mode, chunk=pin_chunk)
+        self.mode = self.decision.mode
+        self.chunk = self.decision.chunk
+
+    # -- queue ---------------------------------------------------------------
+
+    def submit(self, req: Request, metrics: ServeMetrics | None = None
+               ) -> None:
+        assert len(req.prompt) >= 1 and req.max_new >= 1, req
+        self.pending.append(req)
+        if metrics is not None:
+            metrics.on_submit(req.rid, len(req.prompt), req.max_new)
+
+    def has_work(self) -> bool:
+        return bool(self.pending or self.active)
+
+    # -- admission -----------------------------------------------------------
+
+    def admit(self, pt: PageTable) -> list[RequestState]:
+        """Move queued requests into free slots (page-budget permitting).
+        Static mode only admits into an EMPTY batch — the wave barrier."""
+        if self.mode == "static" and self.active:
+            return []
+        newly: list[RequestState] = []
+        while self.pending and self._free_slots:
+            req = self.pending[0]
+            need = pt.cfg.pages_needed(len(req.prompt) + req.max_new)
+            if self._committed_pages + need > pt.cfg.n_pages:
+                break                     # no page budget: wait for frees
+            self.pending.popleft()
+            slot = self._free_slots.pop()
+            rs = RequestState(req=req, slot=slot)
+            self.active[slot] = rs
+            self._committed_pages += need
+            newly.append(rs)
+        return newly
+
+    # -- quantum planning / retirement ---------------------------------------
+
+    def plan_quantum(self, chunk: int) -> QuantumPlan:
+        c = max(1, int(chunk))
+        tokens = np.zeros((self.slots, c), np.int32)
+        n_in = np.ones(self.slots, np.int32)
+        pos = np.zeros(self.slots, np.int32)
+        steps = np.zeros(self.slots, np.int32)
+        for slot, rs in self.active.items():
+            p = len(rs.req.prompt)
+            steps[slot] = min(c, rs.req.total_steps - rs.consumed)
+            pos[slot] = rs.consumed
+            if rs.consumed < p:           # chunked prefill: prompt inputs
+                n = min(int(steps[slot]), p - rs.consumed)
+                n_in[slot] = n
+                tokens[slot, :n] = rs.req.prompt[rs.consumed:rs.consumed + n]
+            else:                         # decoding: chain from last sample
+                n_in[slot] = 1
+                tokens[slot, 0] = rs.last_out
+        return QuantumPlan(tokens=tokens, n_in=n_in, pos=pos, steps=steps,
+                           chunk=c)
+
+    def complete_quantum(self, plan: QuantumPlan, out: np.ndarray,
+                         pt: PageTable, metrics: ServeMetrics
+                         ) -> list[RequestState]:
+        """Fold the quantum's sampled tokens back into request state;
+        retire finished requests (slots + pages return to the free
+        lists)."""
+        finished: list[RequestState] = []
+        for slot, rs in list(self.active.items()):
+            n = int(plan.steps[slot])
+            if n == 0:
+                continue
+            p = len(rs.req.prompt)
+            before = len(rs.generated)
+            for t in range(n):
+                g = rs.consumed + t       # global engine-step index
+                if g >= p - 1 and len(rs.generated) < rs.req.max_new:
+                    rs.generated.append(int(out[slot, t]))
+            delta = len(rs.generated) - before
+            if delta:
+                if before == 0:
+                    metrics.on_first_token(rs.req.rid)
+                metrics.on_generated(rs.req.rid, delta)
+            rs.last_out = int(out[slot, n - 1])
+            rs.consumed += n
+            if rs.done:
+                metrics.on_done(rs.req.rid)
+                finished.append(rs)
+                del self.active[slot]
+                self._free_slots.append(slot)
+                self._committed_pages -= pt.cfg.pages_needed(
+                    p + rs.req.max_new)
+                pt.release(slot)
+        return finished

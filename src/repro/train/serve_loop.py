@@ -116,16 +116,37 @@ def _ssm_out_spec(model: Model):
 
 
 class Generator:
+    """Greedy-generation facade over the two decode engines:
+
+      * ``engine="contiguous"`` (default) — the original static-batch loop
+        over ``Model.decode_step`` and the contiguous [B, S_max] cache.
+        This is the numerical ORACLE for the serving runtime's tests.
+      * ``engine="paged"`` — delegates to the serving runtime
+        (repro/serve): paged KV cache, per-slot positions, static-wave
+        scheduling so the contract (same tokens) is identical.  Extra
+        ``ServeEngine`` knobs ride through ``engine_kwargs``.
+    """
+
     def __init__(self, model: Model, mesh: Mesh, shape: ShapeConfig,
-                 params: Any):
+                 params: Any, engine: str = "contiguous",
+                 **engine_kwargs: Any):
+        assert engine in ("contiguous", "paged"), engine
         self.model = model
         self.mesh = mesh
         self.shape = shape
         self.params = params
-        self.decode_fn, self.cache_sds, self.cache_shardings = \
-            build_decode_step(model, mesh, shape)
+        self.engine = engine
+        self.engine_kwargs = engine_kwargs
+        if engine == "contiguous":
+            self.decode_fn, self.cache_sds, self.cache_shardings = \
+                build_decode_step(model, mesh, shape)
+        else:
+            self.decode_fn = self.cache_sds = self.cache_shardings = None
 
     def empty_cache(self) -> Any:
+        assert self.engine == "contiguous", (
+            "empty_cache is the contiguous decode cache; the paged engine "
+            "owns its pool via repro.serve.ServeEngine")
         return jax.tree.map(
             lambda sds, sh: jax.device_put(
                 jnp.zeros(sds.shape, sds.dtype), sh),
@@ -136,6 +157,8 @@ class Generator:
         """Greedy generation: feeds the prompt token-by-token through the
         decode path (prompt prefill via decode — exercises cache writes),
         then samples ``n_new`` tokens."""
+        if self.engine == "paged":
+            return self._generate_paged(prompt_tokens, n_new)
         cache = self.empty_cache()
         b = prompt_tokens.shape[0]
         out = []
@@ -151,3 +174,15 @@ class Generator:
                 tok = nxt
                 out.append(np.asarray(nxt))
         return np.stack(out, axis=1) if out else np.zeros((b, 0), np.int32)
+
+    def _generate_paged(self, prompt_tokens: np.ndarray,
+                        n_new: int) -> np.ndarray:
+        from repro.serve.engine import ServeEngine
+        b = prompt_tokens.shape[0]
+        kwargs = dict(slots=b, max_seq=self.shape.seq_len,
+                      schedule="static")
+        kwargs.update(self.engine_kwargs)
+        eng = ServeEngine(self.model, self.mesh, self.params, **kwargs)
+        rids = [eng.submit(prompt_tokens[i], n_new) for i in range(b)]
+        results = eng.run()
+        return np.stack([results[r] for r in rids], axis=0)
