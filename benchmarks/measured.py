@@ -242,6 +242,93 @@ def bench_ring_attention(mesh) -> list[tuple[str, float, str]]:
     return rows
 
 
+def bench_pipeline(mesh) -> list[tuple[str, float, str]]:
+    """Pipeline-parallel training step (PR 4 tentpole): gpipe vs 1f1b vs
+    interleaved over 8 stages, full backward through the pipeline.  Every
+    schedule is asserted allclose against the others for loss AND grads
+    (the sequential-oracle equivalence lives in the dist suite); the
+    derived column carries tick counts and the speedup vs the gpipe
+    baseline (1f1b runs the same work in ~2/3 the ticks, each tick one
+    fwd+bwd ppermute pair), plus the O(S)-vs-O(M) stash contrast.  The
+    decision row closes the MDMP loop: cost-model seed -> measured winner
+    recorded by the tuner -> pinned into the decision trail."""
+    from repro.core.tuner import ScheduleTuner
+
+    rows = []
+    s_pipe, n_layers, d, m, b = 8, 16, 64, 16, 8
+    rng = np.random.default_rng(3)
+    ws = jnp.asarray(rng.normal(size=(n_layers, d, d)).astype(np.float32)
+                     * 0.25)
+    xs = jnp.asarray(rng.normal(size=(m, b, d)).astype(np.float32))
+    tg = jnp.asarray(rng.normal(size=(m, b, d)).astype(np.float32))
+
+    def layer_fn(x, w):
+        return jnp.tanh(x @ w)
+
+    from repro.parallel import pipeline as pipe
+
+    def build(name, v):
+        sched = pipe.build_schedule(name, m, s_pipe, v)
+        n_virtual = s_pipe * sched.virtual
+
+        def run(p):
+            def chunk_fn(pp, q, mb, x):
+                x = jnp.where(q == 0, xs[mb], x)
+                cp, per = pipe.slice_chunk_params(pp, n_layers, n_virtual,
+                                                  q)
+                return pipe.masked_chunk_apply(layer_fn, cp, per, x)
+
+            def loss_fn(pp, y, mb):
+                return jnp.mean((y - tg[mb]) ** 2)
+
+            return pipe.pipeline_value_and_grad(
+                chunk_fn, loss_fn, p,
+                jax.ShapeDtypeStruct((b, d), np.float32), sched, "x")
+
+        fn = jax.jit(smap(run, mesh, in_specs=(P(None),),
+                          out_specs=(P(None), P(None))))
+        return sched, fn
+
+    times, outs = {}, {}
+    for name, v in (("gpipe", 1), ("1f1b", 1), ("interleaved", 2)):
+        sched, fn = build(name, v)
+        outs[name] = jax.tree.map(np.asarray, fn(ws))
+        times[name] = _time(fn, ws)
+        note = (f"ticks={sched.ticks} stash={sched.n_stash}"
+                if name == "gpipe" else
+                f"x{times['gpipe'] / times[name]:.2f} vs gpipe; "
+                f"ticks={sched.ticks} stash={sched.n_stash}; "
+                "allclose=gpipe")
+        if name != "gpipe":
+            np.testing.assert_allclose(outs[name][0], outs["gpipe"][0],
+                                       rtol=1e-5)
+            np.testing.assert_allclose(outs[name][1], outs["gpipe"][1],
+                                       rtol=3e-4, atol=1e-6)
+        rows.append((f"pipeline_M{m}_S{s_pipe}_{name}", times[name] * 1e6,
+                     note))
+
+    # the managed decision: cost-model seed -> measured override -> trail
+    tuner = ScheduleTuner()
+    batch_fwd_s = 2.0 * 2.0 * m * b * d * d * (n_layers / s_pipe) / 197e12
+    entry = tuner.decide_pipeline("x", s_pipe, n_layers, (m * b, d),
+                                  batch_fwd_s, m * b * d * 4)
+    seed = f"{entry.mode}:{entry.chunks}"
+    for name, t in times.items():
+        tuner.record(entry.key, name, m, t)
+    win = tuner.entries[entry.key]
+    managed.clear_decision_log()
+    decision = managed.resolve_pipeline_schedule(
+        "x", s_pipe, batch_fwd_s, m * b * d * 4, n_layers=n_layers,
+        schedule=win.mode, n_micro=win.chunks,
+        virtual=2 if win.mode == "interleaved" else 1)
+    rec = managed.decision_log()[-1]
+    rows.append((f"pipeline_decision_{decision.schedule}",
+                 times[win.mode] * 1e6,
+                 f"tuner-measured winner (seed={seed}); "
+                 f"trail={rec.op}({rec.mode} M={rec.chunks})"))
+    return rows
+
+
 def bench_serving() -> list[tuple[str, float, str]]:
     """Serving runtime (PR 3 tentpole): static waves vs continuous
     batching over the paged KV cache on a mixed-prompt-length queue.
@@ -330,6 +417,7 @@ def main_child() -> None:
     rows += bench_pingpong(mesh)
     rows += bench_jacobi(mesh)
     rows += bench_ring_attention(mesh)
+    rows += bench_pipeline(mesh)
     rows += bench_serving()
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")

@@ -228,6 +228,35 @@ def attention_schedule_model() -> list[tuple[str, float, str]]:
     return rows
 
 
+def pipeline_schedule_model() -> list[tuple[str, float, str]]:
+    """The pipeline schedule knob (PR 4 tentpole, same alpha-beta
+    machinery): predicted step seconds of gpipe vs 1f1b vs interleaved
+    for a production point — 4 stages of an 8-layer-per-stage decoder,
+    30 ms of full-batch forward per rank, a 2 GB boundary activation
+    block, and an HBM stash cap that retires GPipe's O(batch) activation
+    memory (the 1F1B memory claim).  The chosen row is what the managed
+    runtime picks: on machines where per-message alpha dominates the
+    fewest-tick 1f1b wins; where the bubble dominates the interleaved
+    virtual chunks shave the ramp."""
+    rows = []
+    s, batch_fwd_s, batch_bytes = 4, 30e-3, 2.0e9
+    for hw in (cm.HECTOR_XE6, cm.HELIOS_BULLX, cm.JUQUEEN_BGQ, cm.TPU_V5E):
+        d = cm.decide_pipeline_schedule(
+            s, batch_fwd_s, batch_bytes, n_layers=32,
+            stash_cap_bytes=1.5e9, hw=hw)
+        for variant in sorted(d.times_s):
+            sched, m, v = variant.split(":")
+            rows.append((f"pipe_sched_{hw.name}_{sched}_m{m}_v{v}",
+                         d.times_s[variant] * 1e3,
+                         f"x{d.bulk_s / d.times_s[variant]:.2f} vs best "
+                         "surviving baseline (ms/step)"))
+        rows.append((f"pipe_sched_{hw.name}_chosen", float(d.n_micro),
+                     f"{d.schedule} M={d.n_micro} v={d.virtual} picked by "
+                     f"cost model (bubble {d.bubble_frac:.2f}, stash "
+                     f"{d.stash_bytes/1e9:.2f}GB <= cap)"))
+    return rows
+
+
 def serve_schedule_model() -> list[tuple[str, float, str]]:
     """The serving schedule knob (PR 3 tentpole, same alpha-beta
     machinery): modeled per-token latency of static waves vs continuous
@@ -269,5 +298,6 @@ def all_tables() -> list[tuple[str, float, str]]:
     rows += fig6b_selective_delay()
     rows += halo_aggregation_model()
     rows += attention_schedule_model()
+    rows += pipeline_schedule_model()
     rows += serve_schedule_model()
     return rows

@@ -45,15 +45,34 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--ckpt", default="/tmp/train100m_ckpt")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--pipeline", default="none",
+                    choices=["none", "gpipe", "1f1b", "interleaved",
+                             "auto"],
+                    help="run the pod axis as pipeline stages; 'auto' "
+                         "lets the managed runtime pick the schedule "
+                         "(cost model + decision trail)")
     args = ap.parse_args()
 
     cfg = CONFIG_100M
     print(f"model: {cfg.param_count()/1e6:.0f}M params")
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    if args.pipeline != "none":
+        mesh = jax.make_mesh((jax.device_count(), 1, 1),
+                             ("pod", "data", "model"))
+    else:
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
     ctx = MeshCtx.from_mesh(mesh, mdmp_mode="auto")
     model = Model(cfg, ctx)
     opt_cfg = AdamWConfig(lr=6e-4, warmup_steps=20, total_steps=args.steps)
-    step_fn, pshard, bshard = build_train_step(model, opt_cfg, mesh)
+    from repro.core import managed
+    managed.clear_decision_log()
+    step_fn, pshard, bshard = build_train_step(
+        model, opt_cfg, mesh, pipeline=args.pipeline,
+        global_batch=args.batch, seq_len=args.seq)
+    for rec in managed.decision_log():
+        if rec.op == "pipeline_schedule":
+            print(f"pipeline schedule: {rec.mode} M={rec.chunks} "
+                  f"(bulk {rec.predicted_bulk_s*1e3:.2f}ms -> "
+                  f"{rec.predicted_interleaved_s*1e3:.2f}ms)")
     data = SyntheticLMData(DataConfig(vocab_size=cfg.vocab_size,
                                       seq_len=args.seq,
                                       global_batch=args.batch))

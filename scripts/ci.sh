@@ -21,6 +21,18 @@ echo "$serve_out" | grep -q "tok/s" || {
 echo "$serve_out" | grep -q "decision serve_schedule(" || {
     echo "FAIL: serve smoke missing the serve_schedule decision"; exit 1; }
 
+echo "== pipeline smoke (managed 1F1B/interleaved training, --pipeline auto) =="
+pipe_out="$(XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m repro.launch.train --arch granite-34b --reduced --steps 2 \
+    --pipeline auto --mesh 2x2x2 --batch 8 --seq 32 \
+    --ckpt /tmp/mdmp_ci_pipe_ckpt)"
+echo "$pipe_out" | head -6
+echo "$pipe_out" | grep -q "decision pipeline_schedule(" || {
+    echo "FAIL: pipeline smoke missing the pipeline_schedule decision"
+    exit 1; }
+echo "$pipe_out" | grep -q "loss" || {
+    echo "FAIL: pipeline smoke produced no training losses"; exit 1; }
+
 echo "== benchmark smoke (python -m benchmarks.run) =="
 out="$(MDMP_BENCH_REPS="${MDMP_BENCH_REPS:-2}" python -m benchmarks.run)"
 echo "$out" | tail -40
@@ -41,6 +53,16 @@ echo "$out" | grep -q "attn_sched_tpu_v5e_causal_chosen" || {
     echo "FAIL: attention schedule model rows missing"; exit 1; }
 echo "$out" | grep -q "ring_attn_decision_.*trail=attention_schedule" || {
     echo "FAIL: attention decision trail entry missing"; exit 1; }
+# Pipeline smoke: the gpipe/1f1b/interleaved sweep must have run (loss and
+# grads asserted allclose in-suite), the modeled schedule table must be
+# present, and the decision trail must contain a pipeline_schedule entry
+# with the tuner-measured winner.
+echo "$out" | grep -q "pipeline_M.*_1f1b," || {
+    echo "FAIL: measured pipeline schedule sweep rows missing"; exit 1; }
+echo "$out" | grep -q "pipe_sched_tpu_v5e_chosen" || {
+    echo "FAIL: pipeline schedule model rows missing"; exit 1; }
+echo "$out" | grep -q "pipeline_decision_.*trail=pipeline_schedule" || {
+    echo "FAIL: pipeline decision trail entry missing"; exit 1; }
 # Serving smoke: the static-vs-continuous sweep must have run (measured
 # rows with token-equality asserted in-suite), the modeled schedule table
 # must be present, and the decision trail must contain a serve_schedule

@@ -14,8 +14,10 @@ Public surface:
 from repro.core.cost_model import (DEFAULT_HW, HECTOR_XE6, HELIOS_BULLX,
                                    JUQUEEN_BGQ, TPU_V5E,
                                    HaloAggregationDecision, HardwareModel,
-                                   RooflineTerms, crossover_compute_per_element,
+                                   PipelineScheduleDecision, RooflineTerms,
+                                   crossover_compute_per_element,
                                    decide, decide_halo_aggregation,
+                                   decide_pipeline_schedule,
                                    halo_sweep_time, roofline)
 from repro.core.halo import (halo_exchange, jacobi_solve,
                              jacobi_step_aggregated, jacobi_step_bulk,
@@ -27,7 +29,8 @@ from repro.core.managed import (DecisionRecord, MDMPConfig,
                                 managed_all_reduce, managed_all_to_all,
                                 managed_psum_scatter_gather,
                                 managed_reduce_scatter, matmul_reduce_scatter,
-                                resolve_halo_aggregation, use_config)
+                                resolve_halo_aggregation,
+                                resolve_pipeline_schedule, use_config)
 from repro.core.overlap import (bucketed_all_reduce, fsdp_gather,
                                 fsdp_gather_tree, grad_accumulate,
                                 reduce_replicated_grads)
@@ -44,10 +47,11 @@ __all__ = [
     "decide_halo_aggregation", "decision_log", "fsdp_gather",
     "fsdp_gather_tree", "get_config", "grad_accumulate",
     "HaloAggregationDecision", "halo_exchange", "halo_sweep_time",
-    "jacobi_solve", "jacobi_step_aggregated", "jacobi_step_bulk",
-    "jacobi_step_overlapped", "managed_all_gather", "managed_all_reduce",
-    "managed_all_to_all", "managed_psum_scatter_gather",
-    "managed_reduce_scatter", "matmul_reduce_scatter",
-    "reduce_replicated_grads", "resolve_halo_aggregation", "roofline",
-    "use_config",
+    "decide_pipeline_schedule", "jacobi_solve", "jacobi_step_aggregated",
+    "jacobi_step_bulk", "jacobi_step_overlapped", "managed_all_gather",
+    "managed_all_reduce", "managed_all_to_all",
+    "managed_psum_scatter_gather", "managed_reduce_scatter",
+    "matmul_reduce_scatter", "PipelineScheduleDecision",
+    "reduce_replicated_grads", "resolve_halo_aggregation",
+    "resolve_pipeline_schedule", "roofline", "use_config",
 ]

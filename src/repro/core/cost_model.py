@@ -585,6 +585,224 @@ def decide_attention_schedule(batch: int, s_local: int, heads: int,
 
 
 # ---------------------------------------------------------------------------
+# Pipeline schedule decision (gpipe vs 1f1b vs interleaved + microbatching)
+# ---------------------------------------------------------------------------
+#
+# The pipeline executor (parallel/pipeline.py) runs lock-step ticks: per
+# tick every stage does at most one forward and one backward unit and
+# hands activations forward / gradients backward with one collective
+# permute each.  The knob is (schedule, microbatch count M, virtual chunk
+# factor v), and the trade is exactly the paper's control-vs-data-flow
+# decision (El-Nashar, arXiv:1311.0731) at schedule granularity:
+#
+#   gpipe        ticks = 2(M+S-1),  critical compute = (M+S-1)(cf+cb),
+#                stash = M microbatch activations per stage.
+#                The bubble fraction is the classic (S-1)/(M+S-1).
+#   1f1b         ticks = M+2S-1,    compute ~= M(cf+cb) + (2S-1) cb,
+#                stash <= 2S (O(n_stage), independent of M).
+#   interleaved  ticks = Mv+vS+S-1, compute ~= M(cf+cb) + (vS+S-1) cb / v,
+#                stash <= 2vS chunk activations (each 1/1 of a microbatch
+#                block).  The ramp's compute shrinks ~v x but every tick
+#                still pays the per-message alpha — v x more messages.
+#
+# Per tick the two handoffs (activation fwd + gradient bwd) cost
+# 2 alpha + 2 bytes / bw, with the bytes hidden under the tick's compute
+# to the extent the stage boundary is ready early (the instrument.py
+# readiness budget of the boundary operand).
+
+
+#: backward flops per forward flop of a transformer chunk (dgrad + wgrad)
+PIPELINE_BWD_FLOP_RATIO = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineScheduleDecision:
+    """Outcome of the pipeline-schedule decision for one training loop."""
+    schedule: str                  # "gpipe" | "1f1b" | "interleaved"
+    n_micro: int                   # microbatch count M
+    virtual: int                   # virtual chunks per rank (1 unless interleaved)
+    times_s: dict[str, float]      # "sched:M:v" -> predicted step seconds
+    bulk_s: float                  # best gpipe variant (unmanaged baseline)
+    chosen_s: float
+    bubble_frac: float             # idle fraction of the chosen schedule
+    stash_bytes: int               # peak activation stash per stage
+
+    @property
+    def predicted_speedup(self) -> float:
+        if self.chosen_s <= 0:
+            return 1.0
+        return self.bulk_s / self.chosen_s
+
+
+def pipeline_stash_slots(schedule: str, n_micro: int, n_stage: int,
+                         virtual: int = 1) -> int:
+    """Closed-form peak live activation count per stage (upper bound,
+    matches the executor's host-allocated stash within +1).  Each slot
+    holds ONE microbatch activation block — GPipe's slot count grows with
+    M (whole batch stashed), 1f1b's is capped at 2S."""
+    m, s = max(1, n_micro), max(1, n_stage)
+    if schedule == "gpipe":
+        return m
+    if schedule == "1f1b":
+        return min(m, 2 * s)
+    return min(m * max(1, virtual), 2 * max(1, virtual) * s + s)
+
+
+def pipeline_schedule_time(schedule: str, n_micro: int, n_stage: int,
+                           virtual: int, batch_fwd_s: float,
+                           batch_bytes: float, *,
+                           hw: HardwareModel = DEFAULT_HW,
+                           overlap_budget: float = 1.0
+                           ) -> tuple[float, int]:
+    """(predicted step seconds, tick count) of one schedule variant.
+
+    ``batch_fwd_s``     one rank's forward compute for the WHOLE batch
+                        (its full layer chunk set, all M microbatches) —
+                        per-microbatch compute is batch_fwd_s / M.
+    ``batch_bytes``     the whole batch's activation block at the stage
+                        boundary — each handoff carries batch_bytes / M
+                        (the gradient handoff is charged the same).
+    ``overlap_budget``  fraction of a tick's compute under which the
+                        transfer can hide (instrument readiness of the
+                        stage boundary; 1.0 = fully hideable).
+    """
+    m, s, v = max(1, n_micro), max(1, n_stage), max(1, virtual)
+    cf = batch_fwd_s / m
+    cb = PIPELINE_BWD_FLOP_RATIO * cf
+    if schedule == "gpipe":
+        ticks = 2 * (m + s - 1)
+        compute = (m + s - 1) * (cf + cb)
+    elif schedule == "1f1b":
+        ticks = m + 2 * s - 1
+        compute = m * (cf + cb) + (2 * s - 1) * cb
+    elif schedule == "interleaved":
+        ticks = m * v + v * s + s - 1
+        compute = m * (cf + cb) + (v * s + s - 1) * cb / v
+    else:
+        raise ValueError(f"unknown pipeline schedule {schedule!r}")
+    link = 2.0 * (batch_bytes / m) / hw.link_bw
+    exposed = max(0.0, link - max(0.0, min(1.0, overlap_budget))
+                  * compute / ticks)
+    return ticks * (2.0 * hw.alpha_s + exposed) + compute, ticks
+
+
+def decide_pipeline_schedule(n_stage: int, batch_fwd_s: float,
+                             batch_bytes: float, *,
+                             n_layers: int | None = None,
+                             stash_cap_bytes: float | None = None,
+                             candidate_micro: Sequence[int] = (4, 8, 16, 32),
+                             candidate_virtual: Sequence[int] = (2,),
+                             hw: HardwareModel = DEFAULT_HW,
+                             overlap_budget: float = 1.0,
+                             force_schedule: str | None = None,
+                             force_micro: int | None = None,
+                             force_virtual: int | None = None
+                             ) -> PipelineScheduleDecision:
+    """Pick (schedule, M, v) for one pipeline-parallel training loop.
+
+    Candidates are dropped when their activation stash (slot count x
+    batch_bytes/M per slot) overruns ``stash_cap_bytes`` — this is what
+    retires GPipe, whose stash is the whole batch regardless of M — or,
+    for interleaved, when M %% S != 0 or v*S exceeds ``n_layers``.  1f1b
+    variants are exempt from the cap (smallest stash, the always-safe
+    fallback).  ``force_*`` pin the choice (an MDMPConfig override, or
+    the tuner's measured winner) while still reporting the modeled
+    table."""
+    s = max(1, n_stage)
+    micros = sorted({int(c) for c in candidate_micro if c >= 1})
+    if force_micro is not None:
+        # an explicit M pins the microbatch count for EVERY schedule (the
+        # CLI contract), not just when the schedule is forced too
+        micros = [max(1, int(force_micro))]
+    virtuals = sorted({int(c) for c in candidate_virtual if c >= 2})
+    if force_virtual is not None and int(force_virtual) >= 2:
+        virtuals = sorted({*virtuals, int(force_virtual)})
+
+    def variants():
+        for m in micros:
+            yield "gpipe", m, 1
+            yield "1f1b", m, 1
+            for v in virtuals:
+                if m % s:
+                    continue
+                if n_layers is not None and v * s > n_layers:
+                    continue
+                yield "interleaved", m, v
+
+    times: dict[str, float] = {}
+    for sched, m, v in variants():
+        if stash_cap_bytes is not None and sched != "1f1b":
+            stash = pipeline_stash_slots(sched, m, s, v) * batch_bytes / m
+            if stash > stash_cap_bytes:
+                continue
+        t, _ = pipeline_schedule_time(
+            sched, m, s, v, batch_fwd_s, batch_bytes, hw=hw,
+            overlap_budget=overlap_budget)
+        times[f"{sched}:{m}:{v}"] = t
+
+    def pick(pred):
+        cands = [(t, k) for k, t in times.items() if pred(k)]
+        return min(cands) if cands else None
+
+    bulk = pick(lambda k: k.startswith("gpipe:"))
+    if bulk is None:        # every gpipe stash overran the cap
+        bulk = pick(lambda k: True)
+    if force_schedule is not None:
+        assert force_schedule in ("gpipe", "1f1b", "interleaved"), \
+            force_schedule
+        sched = force_schedule
+        m = int(force_micro) if force_micro is not None else None
+        v = int(force_virtual) if force_virtual is not None else None
+        key = pick(lambda k, sched=sched, m=m, v=v:
+                   k.startswith(sched + ":")
+                   and (m is None or k.split(":")[1] == str(m))
+                   and (v is None or k.split(":")[2] == str(v)))
+        if key is None:     # forced variant not in the surviving table
+            mm = m if m is not None else min(micros)
+            vv = v if v is not None else \
+                (min(virtuals) if sched == "interleaved" and virtuals else 1)
+            if sched == "interleaved":
+                # fail at the decision layer, not deep inside
+                # build_schedule, when the forced variant is invalid
+                if mm % s:
+                    raise ValueError(
+                        f"interleaved needs n_micro % n_stage == 0 "
+                        f"(got {mm} % {s})")
+                if n_layers is not None and vv * s > n_layers:
+                    raise ValueError(
+                        f"interleaved needs virtual*n_stage <= n_layers "
+                        f"(got {vv}*{s} > {n_layers})")
+            t, _ = pipeline_schedule_time(
+                sched, mm, s, vv, batch_fwd_s, batch_bytes, hw=hw,
+                overlap_budget=overlap_budget)
+            times[f"{sched}:{mm}:{vv}"] = t
+            key = (t, f"{sched}:{mm}:{vv}")
+        chosen = key
+    else:
+        chosen = pick(lambda k: True)
+    assert chosen is not None
+    sched, m_str, v_str = chosen[1].split(":")
+    m, v = int(m_str), int(v_str)
+
+    cf = batch_fwd_s / m
+    cb = PIPELINE_BWD_FLOP_RATIO * cf
+    busy = m * (cf + cb)
+    if sched == "gpipe":
+        crit = (m + s - 1) * (cf + cb)
+    elif sched == "1f1b":
+        crit = busy + (2 * s - 1) * cb
+    else:
+        crit = busy + (v * s + s - 1) * cb / v
+    bubble = 0.0 if crit <= 0 else max(0.0, 1.0 - busy / crit)
+    return PipelineScheduleDecision(
+        schedule=sched, n_micro=m, virtual=v, times_s=times,
+        bulk_s=bulk[0] if bulk else chosen[0], chosen_s=chosen[0],
+        bubble_frac=bubble,
+        stash_bytes=int(pipeline_stash_slots(sched, m, s, v)
+                        * batch_bytes / m))
+
+
+# ---------------------------------------------------------------------------
 # Serve schedule decision (continuous batching + scheduling quantum)
 # ---------------------------------------------------------------------------
 #

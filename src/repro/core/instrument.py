@@ -74,14 +74,39 @@ def _walk(jaxpr: jcore.Jaxpr, tracked: dict[Any, str],
     alias_prims = {"convert_element_type", "reshape", "transpose",
                    "squeeze", "broadcast_in_dim", "copy", "pjit",
                    "custom_jvp_call", "custom_vjp_call", "remat", "checkpoint"}
+    def _raw(p):
+        return p.jaxpr if isinstance(p, jcore.ClosedJaxpr) else (
+            p if isinstance(p, jcore.Jaxpr) else None)
+
     for eqn in jaxpr.eqns:
         depth += 1
+        # (sub-jaxpr, outer operands aligned to its constvars + invars).
+        # while's two jaxprs bind DIFFERENT operand subsets (cond_consts +
+        # carry vs body_consts + carry); cond's first invar is the branch
+        # index, bound by no branch; everything else binds eqn.invars
+        # positionally.
         sub_jaxprs = []
-        for param in eqn.params.values():
-            if isinstance(param, jcore.ClosedJaxpr):
-                sub_jaxprs.append((param.jaxpr, None))
-            elif isinstance(param, jcore.Jaxpr):
-                sub_jaxprs.append((param, None))
+        if eqn.primitive.name == "while":
+            cn = eqn.params["cond_nconsts"]
+            bn = eqn.params["body_nconsts"]
+            ops = list(eqn.invars)
+            carry = ops[cn + bn:]
+            sub_jaxprs.append((_raw(eqn.params["cond_jaxpr"]),
+                               ops[:cn] + carry))
+            sub_jaxprs.append((_raw(eqn.params["body_jaxpr"]),
+                               ops[cn:cn + bn] + carry))
+        else:
+            default_ops = list(eqn.invars)
+            if eqn.primitive.name == "cond":
+                default_ops = default_ops[1:]
+            for param in eqn.params.values():
+                if _raw(param) is not None:
+                    sub_jaxprs.append((_raw(param), default_ops))
+                elif isinstance(param, (tuple, list)):
+                    # cond carries its branches as a tuple of ClosedJaxprs
+                    for p in param:
+                        if _raw(p) is not None:
+                            sub_jaxprs.append((_raw(p), default_ops))
         for v in eqn.invars:
             if isinstance(v, jcore.Literal):
                 continue
@@ -106,14 +131,17 @@ def _walk(jaxpr: jcore.Jaxpr, tracked: dict[Any, str],
                     rec.last_write_depth = depth
                     break
         # Recurse into sub-jaxprs (scan/while/cond/pjit bodies): map tracked
-        # outer vars to inner binders positionally where possible.
-        for sub, _ in sub_jaxprs:
+        # outer vars to inner binders positionally.  Binders pair with the
+        # UNFILTERED operand list — a Literal operand still consumes its
+        # binder position (that binder is literal-bound and simply never
+        # tracked); filtering literals out first would slide every later
+        # binder onto the wrong outer operand.
+        for sub, operands in sub_jaxprs:
             inner_tracked = dict()
-            n_const = len(sub.constvars)
-            operands = [v for v in eqn.invars
-                        if not isinstance(v, jcore.Literal)]
             for inner_v, outer_v in zip(list(sub.constvars) + list(sub.invars),
-                                        operands[:n_const + len(sub.invars)]):
+                                        operands):
+                if isinstance(outer_v, jcore.Literal):
+                    continue
                 if outer_v in tracked:
                     inner_tracked[inner_v] = tracked[outer_v]
             if inner_tracked:

@@ -893,6 +893,58 @@ def resolve_attention_schedule(axis_name: str, axis_size: int, batch: int,
     return decision
 
 
+def resolve_pipeline_schedule(axis_name: str, axis_size: int,
+                              batch_fwd_s: float, batch_bytes: float, *,
+                              n_layers: int | None = None,
+                              stash_cap_bytes: float | None = None,
+                              candidate_micro: Sequence[int] = (4, 8, 16,
+                                                                32),
+                              candidate_virtual: Sequence[int] = (2,),
+                              overlap_budget: float = 1.0,
+                              mode: str | None = None,
+                              schedule: str | None = None,
+                              n_micro: int | None = None,
+                              virtual: int | None = None
+                              ) -> cost_model.PipelineScheduleDecision:
+    """The managed-runtime entry for the pipeline-schedule knob (gpipe vs
+    1f1b vs interleaved, plus the microbatch count M and virtual chunk
+    factor v) — the analogue of ``resolve_halo_aggregation`` for the
+    pipeline-parallel training loop.  Called at build time with static
+    shapes; the chosen (schedule, M, v) feeds
+    ``parallel/pipeline.build_schedule`` and lands in the decision log.
+
+    ``mode='bulk'`` pins gpipe (the unmanaged forward-then-backward
+    baseline); ``mode='interleaved'`` pins 1f1b (the always-intermingle
+    schedule); ``schedule``/``n_micro``/``virtual`` pin an explicit
+    choice (the tuner's measured winner).  ``overlap_budget`` is the
+    instrumented readiness of the stage boundary
+    (``instrument.analyze_region``) — how much of a tick's compute can
+    hide the handoff bytes.  The DecisionRecord reuses ``chunks`` to
+    carry the microbatch count M."""
+    cfg = get_config()
+    eff_mode = mode or cfg.mode
+    # an EXPLICIT schedule wins over the ambient mode (same precedence as
+    # cfg.attn_impl vs mdmp_mode): mode only maps to a schedule when none
+    # was requested
+    force = schedule if schedule is not None else \
+        {"bulk": "gpipe", "interleaved": "1f1b"}.get(eff_mode)
+    decision = cost_model.decide_pipeline_schedule(
+        axis_size, batch_fwd_s, batch_bytes, n_layers=n_layers,
+        stash_cap_bytes=stash_cap_bytes,
+        candidate_micro=candidate_micro,
+        candidate_virtual=candidate_virtual, hw=cfg.hw,
+        overlap_budget=overlap_budget, force_schedule=force,
+        force_micro=n_micro, force_virtual=virtual)
+    if cfg.log_decisions:
+        _DECISION_LOG.append(DecisionRecord(
+            op="pipeline_schedule", axis=axis_name,
+            nbytes=int(batch_bytes / max(1, decision.n_micro)),
+            mode=decision.schedule, chunks=decision.n_micro,
+            predicted_bulk_s=decision.bulk_s,
+            predicted_interleaved_s=decision.chosen_s))
+    return decision
+
+
 def resolve_serve_schedule(axis_name: str, batch_slots: int,
                            mean_prompt: float, mean_new: float,
                            n_params: float, *, dtype_bytes: int = 2,

@@ -173,11 +173,15 @@ def bucketed_all_reduce(grads: Any, axis_name: str, *,
     return jax.tree.unflatten(treedef, out_leaves)
 
 
-def grad_accumulate(step_grads_fn, microbatches: int):
+def grad_accumulate(step_grads_fn, microbatches: int, *, mean: bool = True):
     """Gradient accumulation driver: ``step_grads_fn(mb) -> (loss, grads)``
     over ``microbatches`` stacked microbatches (leading axis).  Returns a
-    function of the stacked batch producing (mean_loss, summed_grads) via
-    lax.scan — keeps HLO size independent of the accumulation factor."""
+    function of the stacked batch producing ``(mean_loss, mean_grads)``
+    with the default ``mean=True`` — loss AND grads are averaged over the
+    microbatches — or ``(mean_loss, summed_grads)`` with ``mean=False``
+    (the raw accumulator, for optimizers that fold the 1/M into the
+    learning rate).  Runs via lax.scan so HLO size stays independent of
+    the accumulation factor."""
     def accumulate(stacked_batch):
         def body(carry, mb):
             loss_acc, grads_acc = carry
@@ -190,6 +194,8 @@ def grad_accumulate(step_grads_fn, microbatches: int):
         rest = jax.tree.map(lambda x: x[1:], stacked_batch)
         (loss, grads), _ = lax.scan(body, (loss0, grads0), rest)
         scale = 1.0 / microbatches
-        return loss * scale, jax.tree.map(lambda g: g * scale, grads)
+        if mean:
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        return loss * scale, grads
 
     return accumulate

@@ -155,6 +155,25 @@ class CommRegion:
             shape=(int(batch), int(s_local), int(heads), int(kv_heads),
                    int(head_dim), int(d_model), int(causal), int(ib))))
 
+    def pipeline(self, label: str, *, axis: str, n_layers: int,
+                 batch_shape, dtype, batch_fwd_s: float) -> None:
+        """Declare a pipeline-parallel stage boundary (layers chunked over
+        ``axis``; ``batch_shape`` is the WHOLE batch's activation block at
+        the boundary — each tick hands off 1/M of it).  Planning runs the
+        pipeline-schedule decision for it, with the boundary operand's
+        instrumented readiness as the overlap budget: the resulting
+        PlanEntry's ``mode`` is the chosen schedule ("gpipe" | "1f1b" |
+        "interleaved", read back via ``plan.schedule_for(label)``) and
+        ``chunks`` the microbatch count M, to be fed to
+        ``parallel/pipeline.build_schedule``."""
+        import numpy as np
+        ib = np.dtype(dtype).itemsize
+        nbytes = int(np.prod(batch_shape)) * ib
+        self._specs.append(CommSpec(
+            label=label, kind="pipeline", axis=axis, nbytes=nbytes,
+            collective="pipeline",
+            shape=(int(n_layers), int(round(batch_fwd_s * 1e12)))))
+
     def serve(self, label: str, *, axis: str, batch_slots: int,
               mean_prompt: int, mean_new: int, n_params: int, dtype,
               max_prompt: int | None = None) -> None:
@@ -222,6 +241,25 @@ class CommRegion:
                 entries[spec.label] = PlanEntry(
                     spec=spec, mode=d.schedule, chunks=1,
                     overlap_budget=1.0, predicted_bulk_s=d.bulk_s,
+                    predicted_interleaved_s=d.chosen_s)
+                continue
+            if spec.kind == "pipeline":
+                # The schedule knob: gpipe vs 1f1b vs interleaved plus the
+                # microbatch count, routed through the managed runtime so
+                # the choice lands in the MDMP decision log.  The stage
+                # boundary's instrumented readiness bounds how much of a
+                # tick's compute can hide the handoff bytes.
+                n_layers, fwd_ps = spec.shape
+                n = self.axis_sizes.get(spec.axis, 1)
+                budget = (report.overlap_budget(spec.label)
+                          if spec.label in report.records else 1.0)
+                with managed.use_config(self.config):
+                    d = managed.resolve_pipeline_schedule(
+                        spec.axis, n, fwd_ps * 1e-12, spec.nbytes,
+                        n_layers=n_layers, overlap_budget=budget)
+                entries[spec.label] = PlanEntry(
+                    spec=spec, mode=d.schedule, chunks=d.n_micro,
+                    overlap_budget=budget, predicted_bulk_s=d.bulk_s,
                     predicted_interleaved_s=d.chosen_s)
                 continue
             if spec.kind == "serve":

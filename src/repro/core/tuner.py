@@ -67,6 +67,12 @@ class ScheduleTuner:
     SERVE_CANDIDATES = (("static", 8), ("continuous", 2),
                         ("continuous", 8), ("continuous", 32))
 
+    #: candidate (schedule, M) variants for pipeline call sites — ``mode``
+    #: carries the schedule name, ``chunks`` the microbatch count M
+    #: (interleaved variants run virtual=2 chunks per rank)
+    PIPELINE_CANDIDATES = (("gpipe", 8), ("1f1b", 8), ("1f1b", 16),
+                           ("interleaved", 8))
+
     def __init__(self, hw: HardwareModel = TPU_V5E,
                  path: str | None = None):
         self.hw = hw
@@ -137,6 +143,28 @@ class ScheduleTuner:
             self._entries[key] = entry
         return entry
 
+    def decide_pipeline(self, axis: str, axis_size: int, n_layers: int,
+                        batch_shape: tuple, batch_fwd_s: float,
+                        batch_bytes: int, *,
+                        dtype_str: str = "float32") -> TunerEntry:
+        """Schedule decision for a pipeline-parallel call site: seeded from
+        the pipeline cost model (``mode`` carries the schedule name,
+        ``chunks`` the microbatch count M), then overridden by measured
+        step seconds fed back through ``record(key, "1f1b", M, seconds)``
+        — the paper's iteration-(k)->(k+1) adaptation applied to the
+        pipeline knob.  Persisted like every other entry."""
+        key = call_site_key("pipeline", (n_layers, *batch_shape), dtype_str,
+                            axis, axis_size)
+        entry = self._entries.get(key)
+        if entry is None:
+            d = cost_model.decide_pipeline_schedule(
+                axis_size, batch_fwd_s, batch_bytes, n_layers=n_layers,
+                hw=self.hw)
+            entry = TunerEntry(key=key, mode=d.schedule, chunks=d.n_micro,
+                               predicted_s=d.chosen_s)
+            self._entries[key] = entry
+        return entry
+
     def decide_serve(self, batch_slots: int, mean_prompt: int,
                      mean_new: int, n_params: int, *,
                      dtype_str: str = "bfloat16", dtype_bytes: int = 2,
@@ -192,6 +220,8 @@ class ScheduleTuner:
                       if key.startswith("attention")
                       else self.SERVE_CANDIDATES
                       if key.startswith("serve")
+                      else self.PIPELINE_CANDIDATES
+                      if key.startswith("pipeline")
                       else self.CANDIDATES)
         entry = self._entries.get(key)
         if entry is None:

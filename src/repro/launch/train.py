@@ -32,8 +32,17 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--mdmp-mode", default="auto",
                     choices=["auto", "bulk", "interleaved"])
+    ap.add_argument("--pipeline", default="none",
+                    choices=["none", "gpipe", "1f1b", "interleaved",
+                             "auto"],
+                    help="run the pod axis as pipeline stages (auto = "
+                         "managed schedule decision)")
+    ap.add_argument("--microbatches", type=int, default=None,
+                    help="pipeline microbatch count M (default: the "
+                         "cost model's pick)")
     ap.add_argument("--mesh", default=None,
-                    help="e.g. 2x4 (data x model); default = all devices "
+                    help="e.g. 2x4 (data x model) or 2x2x2 "
+                         "(pod x data x model); default = all devices "
                          "on data")
     ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
     ap.add_argument("--resume", action="store_true")
@@ -46,20 +55,36 @@ def main() -> None:
         dims = tuple(int(x) for x in args.mesh.split("x"))
         axes = (("pod", "data", "model") if len(dims) == 3
                 else ("data", "model"))
+    elif args.pipeline != "none":
+        dims = (jax.device_count(), 1, 1)
+        axes = ("pod", "data", "model")
     else:
         dims = (jax.device_count(), 1)
         axes = ("data", "model")
+    if args.pipeline != "none" and "pod" not in axes:
+        ap.error("--pipeline needs a pod axis: pass a 3-axis --mesh "
+                 "like 2x2x2 (pod x data x model)")
     mesh = jax.make_mesh(dims, axes)
     ctx = MeshCtx.from_mesh(mesh, mdmp_mode=args.mdmp_mode)
     model = Model(cfg, ctx)
     print(f"arch={args.arch} params={cfg.param_count()/1e6:.1f}M "
-          f"mesh={dims} mdmp={args.mdmp_mode}")
+          f"mesh={dims} mdmp={args.mdmp_mode} pipeline={args.pipeline}")
 
     opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 10),
                           total_steps=args.steps,
                           moment_dtype=cfg.moment_dtype)
+    from repro.core import managed as managed_lib
+    managed_lib.clear_decision_log()
     step_fn, pshard, bshard = build_train_step(
-        model, opt_cfg, mesh, compress_pod=args.compress_pod)
+        model, opt_cfg, mesh, compress_pod=args.compress_pod,
+        pipeline=args.pipeline, pipe_microbatches=args.microbatches,
+        global_batch=args.batch, seq_len=args.seq)
+    for rec in managed_lib.decision_log():
+        if rec.op == "pipeline_schedule":
+            print(f"decision pipeline_schedule({rec.mode} M={rec.chunks} "
+                  f"axis={rec.axis} handoff={rec.nbytes/1e3:.1f}kB "
+                  f"bulk={rec.predicted_bulk_s*1e3:.2f}ms "
+                  f"chosen={rec.predicted_interleaved_s*1e3:.2f}ms)")
     data = SyntheticLMData(DataConfig(vocab_size=cfg.vocab_size,
                                       seq_len=args.seq,
                                       global_batch=args.batch))

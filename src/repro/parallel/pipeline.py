@@ -1,38 +1,388 @@
-"""Pipeline parallelism over the ``pod`` axis.
+"""Managed pipeline parallelism over the ``pod`` axis.
 
 The multi-pod mesh's default posture is hierarchical DP across pods; this
 module provides the alternative: the pod axis as pipeline STAGES.  Layers
-split into ``n_pods`` contiguous stages; microbatches stream through a
-GPipe schedule whose stage handoff is a single managed collective-permute
-(the MDMP "message") per tick — compute on microbatch i overlaps the
-permute of microbatch i-1 exactly like the paper's intermingled sends.
+split into contiguous chunks (one per *virtual* stage; ``virtual=1`` is the
+classic one-chunk-per-rank layout) and microbatches stream through a
+lock-step schedule whose per-tick stage handoff is a single managed
+collective-permute (the MDMP "message") — compute on one microbatch
+overlaps the permute of the neighbouring one exactly like the paper's
+intermingled sends.
 
-Used by launch/dryrun.py's --pipeline demo cell and the dist test; the
-schedule works for any stage_fn (the dense block stack here).
+Three schedules share one executor, driven by host-built timetables:
+
+  * ``gpipe``        — all forwards, then all backwards.  Simple, but every
+                       stage stashes O(M) microbatch activations.
+  * ``1f1b``         — the backward of microbatch i starts as soon as the
+                       last stage finishes its forward; forwards and
+                       backwards share ticks, so at most O(S) activations
+                       are ever live per stage.
+  * ``interleaved``  — ``virtual`` layer chunks per rank (Megatron-style
+                       circular placement: chunk j of rank r is virtual
+                       stage j*S + r).  The ramp shrinks by the chunk
+                       factor at the cost of ~virtual x more (smaller)
+                       handoffs.
+
+Which schedule (and microbatch count / virtual factor) to run is a managed
+decision: ``core/cost_model.decide_pipeline_schedule`` models each
+timetable's ticks x (alpha + bytes/bw) + bubble, and
+``core/managed.resolve_pipeline_schedule`` logs the choice.
+
+The timetables are built (and their invariants checked) on the host at
+trace time; every handoff is *tight* by construction — the consuming rank
+runs the dependent unit exactly one tick after the producer — so the
+executor needs no receive queues, just the activation stash.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 Array = jax.Array
+
+SCHEDULES = ("gpipe", "1f1b", "interleaved")
+
+
+# ---------------------------------------------------------------------------
+# Layer -> stage/chunk partitioning
+# ---------------------------------------------------------------------------
+
+
+def chunk_bounds(n_layers: int, n_chunks: int, chunk_idx):
+    """(first layer, layer count) of chunk ``chunk_idx`` when ``n_layers``
+    split into ``n_chunks`` contiguous chunks.  The remainder
+    ``n_layers % n_chunks`` is distributed to the FIRST chunks (one extra
+    layer each) so no layer is ever dropped.  ``chunk_idx`` may be a python
+    int (host partitioning) or a traced value (inside shard_map)."""
+    base, rem = divmod(int(n_layers), int(n_chunks))
+    if isinstance(chunk_idx, (int, np.integer)):
+        lo = chunk_idx * base + min(int(chunk_idx), rem)
+        return lo, base + (1 if chunk_idx < rem else 0)
+    lo = chunk_idx * base + jnp.minimum(chunk_idx, rem)
+    return lo, base + (chunk_idx < rem).astype(jnp.int32)
+
+
+def stage_layer_slice(n_layers: int, axis_name: str = "pod"):
+    """(first layer index of this stage, layers of this stage).
+
+    Remainder layers go to the first ``n_layers % n_stage`` stages; the
+    returned count is therefore per-stage (a traced value), not uniform.
+    Callers that need a static slice extent should slice
+    ``max_chunk_layers`` rows (see ``slice_chunk_params``) and mask."""
+    n_stage = lax.psum(1, axis_name)
+    return chunk_bounds(n_layers, n_stage, lax.axis_index(axis_name))
+
+
+def max_chunk_layers(n_layers: int, n_chunks: int) -> int:
+    """Static upper bound on any chunk's layer count."""
+    return -(-int(n_layers) // int(n_chunks))
+
+
+def slice_chunk_params(stacked: Any, n_layers: int, n_chunks: int,
+                      chunk_idx) -> tuple[Any, Any]:
+    """Slice chunk ``chunk_idx``'s layers out of a leaf-stacked layer tree.
+
+    Returns (chunk tree with static leading dim ``max_chunk_layers``,
+    per — the number of VALID leading rows).  Rows past ``per`` are other
+    chunks' layers; apply them under a mask (``masked_chunk_apply``).
+
+    When the partition is uneven the last chunks' ``lo + mx`` would run
+    past the stack, so the slice start is clamped in-bounds and the rows
+    rotated so this chunk's layers lead — an O(mx)-row shuffle per call,
+    never a copy of the whole stack."""
+    mx = max_chunk_layers(n_layers, n_chunks)
+    lo, per = chunk_bounds(n_layers, n_chunks, chunk_idx)
+    even = n_chunks * mx == int(n_layers)
+    lo_c = lo if even else jnp.minimum(lo, int(n_layers) - mx)
+    shift = lo - lo_c
+
+    def one(a):
+        rows = lax.dynamic_slice_in_dim(a, lo_c, mx, axis=0)
+        return rows if even else jnp.roll(rows, -shift, axis=0)
+
+    return jax.tree.map(one, stacked), per
+
+
+def masked_chunk_apply(layer_fn: Callable[[Array, Any], Array],
+                       chunk_params: Any, per, x: Array) -> Array:
+    """Apply the (padded) layer chunk: row i runs only while ``i < per``
+    (identity otherwise), so uneven stage partitions stay correct under a
+    static scan extent."""
+    mx = jax.tree.leaves(chunk_params)[0].shape[0]
+
+    def body(carry, xs):
+        i, p = xs
+        y = layer_fn(carry, p)
+        return jnp.where(i < per, y, carry), None
+
+    out, _ = lax.scan(body, x, (jnp.arange(mx), chunk_params))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Host-built lock-step timetables
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSchedule:
+    """One schedule's timetable: per tick and rank, the forward / backward
+    lane's (microbatch, virtual chunk, stash slot), -1 = idle.  ``n_stash``
+    is the peak live activation count per rank — the memory contrast
+    between schedules (gpipe: M; 1f1b: <= 2S-1)."""
+    name: str
+    n_stage: int
+    n_micro: int
+    virtual: int
+    ticks: int
+    n_stash: int
+    f_mb: np.ndarray          # [T, S] int32
+    f_chunk: np.ndarray
+    f_slot: np.ndarray
+    b_mb: np.ndarray
+    b_chunk: np.ndarray
+    b_slot: np.ndarray
+
+
+def _timetable(name: str, m: int, s: int, v: int):
+    """(mb, virtual stage) -> tick for the F and B lanes.  Every schedule
+    here is *tight*: F(mb, q) runs exactly one tick after F(mb, q-1) and
+    B(mb, q) exactly one tick after B(mb, q+1), so handoffs never queue."""
+    n_virtual = s * v
+    fwd: dict[tuple[int, int], int] = {}
+    bwd: dict[tuple[int, int], int] = {}
+    if name in ("gpipe", "1f1b"):
+        if v != 1:
+            raise ValueError(f"{name} runs one chunk per rank (virtual=1)")
+        for mb in range(m):
+            for q in range(s):
+                fwd[(mb, q)] = mb + q
+                bwd[(mb, q)] = ((m + s - 1) + (m - 1 - mb) + (s - 1 - q)
+                                if name == "gpipe"
+                                else 2 * s - 1 - q + mb)
+    elif name == "interleaved":
+        if v < 2:
+            raise ValueError("interleaved needs virtual >= 2")
+        if m % s:
+            raise ValueError(
+                f"interleaved needs n_micro % n_stage == 0 (got {m} % {s})")
+        for mb in range(m):
+            g, i = divmod(mb, s)
+            last_f = g * v * s + (v - 1) * s + i + (s - 1)
+            for q in range(n_virtual):
+                j, r = divmod(q, s)
+                fwd[(mb, q)] = g * v * s + j * s + i + r
+                bwd[(mb, q)] = last_f + 1 + (n_virtual - 1 - q)
+    else:
+        raise ValueError(f"unknown pipeline schedule {name!r}")
+    return fwd, bwd
+
+
+def build_schedule(name: str, n_micro: int, n_stage: int,
+                   virtual: int = 1) -> PipelineSchedule:
+    """Build (and verify) the lock-step timetable for one schedule."""
+    m, s = int(n_micro), int(n_stage)
+    v = int(virtual) if name == "interleaved" else 1
+    n_virtual = s * v
+    fwd, bwd = _timetable(name, m, s, v)
+    ticks = 1 + max(max(fwd.values()), max(bwd.values()))
+
+    f_mb = np.full((ticks, s), -1, np.int32)
+    f_chunk = np.full((ticks, s), -1, np.int32)
+    b_mb = np.full((ticks, s), -1, np.int32)
+    b_chunk = np.full((ticks, s), -1, np.int32)
+    for (mb, q), t in fwd.items():
+        r = q % s
+        assert f_mb[t, r] < 0, ("F lane collision", name, t, r)
+        f_mb[t, r], f_chunk[t, r] = mb, q
+        if q > 0:                       # tight forward handoff
+            assert fwd[(mb, q - 1)] == t - 1, (name, mb, q)
+        assert bwd[(mb, q)] > t, (name, mb, q)
+    for (mb, q), t in bwd.items():
+        r = q % s
+        assert b_mb[t, r] < 0, ("B lane collision", name, t, r)
+        b_mb[t, r], b_chunk[t, r] = mb, q
+        if q < n_virtual - 1:           # tight backward handoff
+            assert bwd[(mb, q + 1)] == t - 1, (name, mb, q)
+
+    # Stash slots: allocated at F, freed after B.  A slot freed by this
+    # tick's B only re-enters the pool NEXT tick (the executor runs F's
+    # stash write before B's read).
+    f_slot = np.full((ticks, s), -1, np.int32)
+    b_slot = np.full((ticks, s), -1, np.int32)
+    n_stash = 1
+    for r in range(s):
+        free: list[int] = []
+        live: dict[tuple[int, int], int] = {}
+        hwm = 0
+        for t in range(ticks):
+            if f_mb[t, r] >= 0:
+                slot = free.pop() if free else hwm
+                if slot == hwm:
+                    hwm += 1
+                f_slot[t, r] = slot
+                live[(int(f_mb[t, r]), int(f_chunk[t, r]))] = slot
+            if b_mb[t, r] >= 0:
+                slot = live.pop((int(b_mb[t, r]), int(b_chunk[t, r])))
+                b_slot[t, r] = slot
+                free.append(slot)
+        assert not live, (name, r, live)
+        n_stash = max(n_stash, hwm)
+
+    return PipelineSchedule(
+        name=name, n_stage=s, n_micro=m, virtual=v, ticks=ticks,
+        n_stash=n_stash, f_mb=f_mb, f_chunk=f_chunk, f_slot=f_slot,
+        b_mb=b_mb, b_chunk=b_chunk, b_slot=b_slot)
+
+
+# ---------------------------------------------------------------------------
+# The lock-step executor (forward + backward through the pipeline)
+# ---------------------------------------------------------------------------
+
+
+def pipeline_value_and_grad(chunk_fn: Callable, loss_fn: Callable,
+                            params: Any, x_proto, sched: PipelineSchedule,
+                            axis_name: str = "pod", *, mean: bool = True,
+                            grad_seed_scale: float = 1.0,
+                            reduce_grads: bool = True
+                            ) -> tuple[Array, Any]:
+    """Run the pipelined training step: loss AND grads flow through the
+    pipeline via explicit fwd/bwd ticks.
+
+    chunk_fn(params, chunk_idx, mb_idx, x) -> y
+        one virtual stage's layer chunk; y has ``x_proto``'s shape/dtype.
+        The FIRST virtual stage (chunk_idx == 0, only ever run on rank 0)
+        must ignore ``x`` and build its input from the microbatch index
+        (embedding / injection).
+    loss_fn(params, y, mb_idx) -> scalar
+        per-microbatch loss from the LAST virtual stage's output.
+    x_proto: array or ShapeDtypeStruct of the inter-stage activation block.
+
+    Per tick every rank runs at most one F unit (stashing the chunk INPUT;
+    the chunk itself is recomputed in the backward — rematerialisation)
+    and one B unit (vjp of the chunk, seeding from the loss at the last
+    virtual stage), then hands activations forward / gradients backward
+    with one collective-permute each — the two MDMP messages of this
+    subsystem.  Backward compute of microbatch i overlaps the handoff of
+    microbatch i+1 exactly like the paper's intermingled sends.
+
+    Returns (loss, grads): loss is psum'd over ``axis_name`` (valid on all
+    ranks); grads cover this rank's chunks (zeros elsewhere) unless
+    ``reduce_grads`` also psums them.  ``mean=True`` returns per-microbatch
+    means; ``mean=False`` the sums.  ``grad_seed_scale`` multiplies the
+    backward seed only (shard_map replication corrections) — the reported
+    loss is never scaled by it.
+    """
+    s = sched.n_stage
+    n_virtual = s * sched.virtual
+    m = sched.n_micro
+    sid = lax.axis_index(axis_name) if s > 1 else jnp.int32(0)
+    fwd_perm = [(i, (i + 1) % s) for i in range(s)]
+    bwd_perm = [(i, (i - 1) % s) for i in range(s)]
+    act_shape = tuple(x_proto.shape)
+    act_dtype = x_proto.dtype
+    zero_act = jnp.zeros(act_shape, act_dtype)
+    seed_scale = (1.0 / m if mean else 1.0) * grad_seed_scale
+
+    tables = {k: jnp.asarray(getattr(sched, k))
+              for k in ("f_mb", "f_chunk", "f_slot",
+                        "b_mb", "b_chunk", "b_slot")}
+
+    def tick(carry, row):
+        fwd_msg, bwd_msg, stash, grads, loss_acc = carry
+        if s > 1:
+            # issue both permutes FIRST: the handoffs of the neighbouring
+            # microbatches overlap this tick's chunk compute.
+            x_recv = lax.ppermute(fwd_msg, axis_name, fwd_perm)
+            dy_recv = lax.ppermute(bwd_msg, axis_name, bwd_perm)
+        else:
+            x_recv, dy_recv = fwd_msg, bwd_msg
+        f_mb = jnp.take(row["f_mb"], sid)
+        f_chunk = jnp.take(row["f_chunk"], sid)
+        f_slot = jnp.take(row["f_slot"], sid)
+        b_mb = jnp.take(row["b_mb"], sid)
+        b_chunk = jnp.take(row["b_chunk"], sid)
+        b_slot = jnp.take(row["b_slot"], sid)
+
+        def run_f(ops):
+            stash_c, x_in = ops
+            y = chunk_fn(params, f_chunk, jnp.maximum(f_mb, 0), x_in)
+            stash_c = lax.dynamic_update_slice_in_dim(
+                stash_c, x_in[None].astype(stash_c.dtype),
+                jnp.maximum(f_slot, 0), axis=0)
+            return y.astype(act_dtype), stash_c
+
+        y_out, stash = lax.cond(f_mb >= 0, run_f,
+                                lambda ops: (zero_act, ops[0]),
+                                (stash, x_recv))
+
+        def run_b(ops):
+            grads_c, loss_c, dy = ops
+            mb = jnp.maximum(b_mb, 0)
+            x_in = lax.dynamic_index_in_dim(
+                stash, jnp.maximum(b_slot, 0), axis=0, keepdims=False)
+
+            def do_last(_):
+                def fn(p, xi):
+                    return loss_fn(p, chunk_fn(p, b_chunk, mb, xi), mb)
+                lval, vjp = jax.vjp(fn, params, x_in)
+                dp, dx = vjp(jnp.asarray(seed_scale, lval.dtype))
+                return dp, dx, lval.astype(jnp.float32)
+
+            def do_mid(_):
+                def fn(p, xi):
+                    return chunk_fn(p, b_chunk, mb, xi)
+                y, vjp = jax.vjp(fn, params, x_in)
+                dp, dx = vjp(dy.astype(y.dtype))
+                return dp, dx, jnp.float32(0.0)
+
+            dp, dx, lval = lax.cond(b_chunk == n_virtual - 1,
+                                    do_last, do_mid, None)
+            grads_c = jax.tree.map(jnp.add, grads_c, dp)
+            return grads_c, loss_c + lval, dx.astype(act_dtype)
+
+        grads, loss_acc, dx_out = lax.cond(
+            b_mb >= 0, run_b,
+            lambda ops: (ops[0], ops[1], zero_act),
+            (grads, loss_acc, dy_recv))
+
+        return (y_out, dx_out, stash, grads, loss_acc), None
+
+    stash0 = jnp.zeros((sched.n_stash,) + act_shape, act_dtype)
+    grads0 = jax.tree.map(jnp.zeros_like, params)
+    carry0 = (zero_act, zero_act, stash0, grads0, jnp.float32(0.0))
+    (_, _, _, grads, loss_acc), _ = lax.scan(tick, carry0, tables)
+
+    loss = loss_acc / m if mean else loss_acc
+    if s > 1:
+        loss = lax.psum(loss, axis_name)       # only the last stage adds
+        if reduce_grads:
+            grads = jax.tree.map(lambda g: lax.psum(g, axis_name), grads)
+    return loss, grads
+
+
+# ---------------------------------------------------------------------------
+# Forward-only GPipe (the bulk baseline; kept for inference / demos)
+# ---------------------------------------------------------------------------
 
 
 def pipeline_apply(stage_fn: Callable[[Array, Any], Array],
                    stage_params: Any, x_microbatches: Array,
                    axis_name: str = "pod") -> Array:
-    """GPipe over the ``axis_name`` stages.
+    """Forward-only GPipe over the ``axis_name`` stages.
 
     stage_fn(x, params) -> x    this rank's layer sub-stack
     stage_params                this rank's stage parameters (local)
     x_microbatches: [M, B, ...] microbatches (equal on every stage; only
                                 stage 0's input content matters)
     Returns [M, B, ...] outputs (valid on the LAST stage; other stages
-    return in-flight garbage — callers psum-select, see pipeline_lm_loss).
+    return in-flight garbage — callers psum-select, see select_last_stage).
 
     Schedule: T = M + S - 1 ticks; at tick t stage s processes microbatch
     t - s.  The inter-stage handoff is one collective_permute per tick.
@@ -75,11 +425,3 @@ def select_last_stage(x: Array, axis_name: str = "pod") -> Array:
     sid = lax.axis_index(axis_name)
     mask = (sid == n_stage - 1).astype(x.dtype)
     return lax.psum(x * mask, axis_name)
-
-
-def stage_layer_slice(n_layers: int, axis_name: str = "pod"
-                      ) -> tuple[Array, int]:
-    """(first layer index of this stage, layers per stage)."""
-    n_stage = lax.psum(1, axis_name)
-    per = n_layers // n_stage
-    return lax.axis_index(axis_name) * per, per

@@ -31,9 +31,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import checkpoint as ckpt_lib
 from repro.core import managed
 from repro.data.pipeline import SyntheticLMData
+from repro.models import layers as model_layers
+from repro.models import transformer
 from repro.models.model import Model
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.parallel import compression
+from repro.parallel import pipeline as pipe
 from repro.parallel.sharding import MeshCtx, ParamSpec, smap, spec_pspecs
 
 Array = jax.Array
@@ -95,17 +98,34 @@ def _replication_factor(pspec: P, ctx: MeshCtx) -> int:
 
 
 def build_train_step(model: Model, opt_cfg: AdamWConfig, mesh: Mesh, *,
-                     compress_pod: bool = False, donate: bool = True
+                     compress_pod: bool = False, donate: bool = True,
+                     pipeline: str = "none",
+                     pipe_microbatches: int | None = None,
+                     global_batch: int | None = None,
+                     seq_len: int | None = None
                      ) -> tuple[Callable, Any, Any]:
     """Returns (jitted step, param NamedShardings, batch NamedShardings).
 
     step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+    ``pipeline`` turns the pod axis into pipeline STAGES instead of
+    hierarchical DP: "gpipe" | "1f1b" | "interleaved" pin a schedule,
+    "auto" lets the managed runtime pick (cost model + decision log,
+    ``managed.resolve_pipeline_schedule``); the batch then replicates
+    across pods and streams through the stages as ``pipe_microbatches``
+    microbatches (default: the decision's M).  ``global_batch``/
+    ``seq_len`` feed the cost model's compute/bytes estimates.
     """
     cfg = model.cfg
     ctx = model.ctx
     spec_tree = model.param_specs()
     pspecs = spec_pspecs(spec_tree)
-    batch_axes = ctx.batch_axes
+    use_pipe = pipeline != "none"
+    if use_pipe:
+        assert ctx.has_pod, (
+            f"pipeline={pipeline!r} needs a 'pod' mesh axis (stages); "
+            f"got axes {tuple(ctx.axis_sizes)}")
+    batch_axes = ("data",) if use_pipe else ctx.batch_axes
     batch_pspec = {"tokens": P(batch_axes, None),
                    "labels": P(batch_axes, None)}
     if cfg.encoder is not None:
@@ -118,6 +138,89 @@ def build_train_step(model: Model, opt_cfg: AdamWConfig, mesh: Mesh, *,
     for n in ctx.axis_sizes.values():
         n_devices *= n
 
+    sched = None
+    if use_pipe:
+        assert model.scan_layers and cfg.moe is None \
+            and cfg.encoder is None and cfg.vision is None and accum == 1, \
+            "pipeline training needs a uniform scanned decoder stack"
+        n_stage = ctx.pods
+        # cost-model inputs: one rank's full-batch forward compute
+        # (~2 flops/param/token over its layer share) and the boundary
+        # activation block
+        gb = global_batch if global_batch is not None else 8
+        sl = seq_len if seq_len is not None else 128
+        b_loc = max(1, gb // max(1, ctx.dp))
+        tokens_loc = b_loc * sl
+        batch_fwd_s = (2.0 * cfg.param_count() / n_stage * tokens_loc
+                       / managed.get_config().hw.peak_flops)
+        batch_bytes = (b_loc * (sl // max(1, ctx.tp)) * cfg.d_model
+                       * jnp.dtype(cfg.dtype).itemsize)
+        # M must tile the local batch: restrict the candidates (and any
+        # explicit M) to divisors of b_loc up front, not at trace time
+        cand_micro = tuple(m for m in (1, 2, 4, 8, 16, 32, 64)
+                           if b_loc % m == 0)
+        if pipe_microbatches is not None:
+            assert b_loc % pipe_microbatches == 0, (
+                f"--microbatches {pipe_microbatches} must divide the "
+                f"local batch {b_loc}")
+        decision = managed.resolve_pipeline_schedule(
+            "pod", n_stage, batch_fwd_s, batch_bytes,
+            n_layers=cfg.n_layers, candidate_micro=cand_micro,
+            mode=ctx.mdmp_mode,
+            schedule=None if pipeline == "auto" else pipeline,
+            n_micro=pipe_microbatches)
+        sched = pipe.build_schedule(decision.schedule, decision.n_micro,
+                                    n_stage, decision.virtual)
+
+    def pipe_loss_and_grads(params, batch):
+        """Loss + grads through the managed pipeline over the pod axis.
+        Grads come back per-stage partial (each rank only differentiates
+        its own chunks); sync_grads' pod psum assembles the full tree."""
+        n_virtual = sched.n_stage * sched.virtual
+        m = sched.n_micro
+        tokens, labels_b = batch["tokens"], batch["labels"]
+        b_loc, sl = tokens.shape
+        assert b_loc % m == 0, (b_loc, m)
+        toks = tokens.reshape(m, b_loc // m, sl)
+        labels_s = labels_b.reshape(m, b_loc // m, sl)
+        proto = jax.ShapeDtypeStruct(
+            (b_loc // m, sl // max(1, ctx.tp), cfg.d_model),
+            jnp.dtype(cfg.dtype))
+
+        def chunk_fn(p, q, mb, x):
+            x = lax.cond(
+                q == 0,
+                lambda op: model._assemble_input_sp(
+                    p, {"tokens": toks[mb]}).astype(op.dtype),
+                lambda op: op, x)
+            cp, per = pipe.slice_chunk_params(p["layers"], cfg.n_layers,
+                                              n_virtual, q)
+
+            def layer_fn(xc, lp):
+                y, _, _, _ = transformer.block_sp(
+                    xc, lp, cfg, ctx, causal=True,
+                    window=cfg.sliding_window, collect_kv=False)
+                return y
+
+            return pipe.masked_chunk_apply(layer_fn, cp, per, x)
+
+        def loss_fn(p, y, mb):
+            x = model_layers.rms_norm(y, p["final_ln"], cfg.norm_eps)
+            loss_sum, count = model_layers.lm_loss_sp(
+                x, model._unembed(p), labels_s[mb], cfg, ctx)
+            for ax in ("data", "model"):
+                if ax in ctx.axis_sizes:
+                    loss_sum = managed.managed_all_reduce(loss_sum, ax)
+                    count = managed.managed_all_reduce(count, ax)
+            return loss_sum / jnp.maximum(count, 1.0)
+
+        # the loss psums over data+model replicate it there; the backward
+        # seed divides their product away (same correction as micro())
+        n_md = ctx.dp * ctx.tp
+        return pipe.pipeline_value_and_grad(
+            chunk_fn, loss_fn, params, proto, sched, "pod", mean=True,
+            grad_seed_scale=1.0 / n_md, reduce_grads=False)
+
     def body(params, opt_state, batch):
         def micro(p, mb):
             # The psum'd loss is REPLICATED on every rank; shard_map
@@ -127,7 +230,9 @@ def build_train_step(model: Model, opt_cfg: AdamWConfig, mesh: Mesh, *,
             loss, metrics = model.loss_sp(p, mb)
             return loss / n_devices, loss
 
-        if accum > 1:
+        if use_pipe:
+            loss, grads = pipe_loss_and_grads(params, batch)
+        elif accum > 1:
             def split(x):
                 b = x.shape[0]
                 return x.reshape(accum, b // accum, *x.shape[1:])

@@ -1,0 +1,351 @@
+"""Tier-1 pipeline-subsystem tests (single device; the pod axis has size 1
+here — the 8-way versions live in tests/dist_suite/test_pipeline.py).
+
+Covers the stage-partition remainder fix, the lock-step schedule builder's
+invariants (incl. the O(n_stage)-vs-O(M) stash contrast), loss+grad
+equivalence of all three schedules against the sequential oracle, the
+grad-accumulation contract, and the managed decision / tuner / region
+units for the pipeline knob.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import managed, overlap, region, tuner
+from repro.parallel import pipeline
+
+
+# -- stage partitioning (the remainder bugfix) -------------------------------
+
+
+def test_chunk_bounds_distributes_remainder():
+    """5 layers over 2 stages: stage 0 gets 3, stage 1 gets 2 — the seed
+    code silently dropped the last n_layers % n_stage layers."""
+    assert pipeline.chunk_bounds(5, 2, 0) == (0, 3)
+    assert pipeline.chunk_bounds(5, 2, 1) == (3, 2)
+
+
+@pytest.mark.parametrize("n_layers,n_chunks",
+                         [(5, 2), (7, 3), (2, 8), (9, 4), (16, 8), (3, 3)])
+def test_chunk_bounds_cover_all_layers(n_layers, n_chunks):
+    seen = []
+    for q in range(n_chunks):
+        lo, per = pipeline.chunk_bounds(n_layers, n_chunks, q)
+        seen.extend(range(lo, lo + per))
+        assert per <= pipeline.max_chunk_layers(n_layers, n_chunks)
+    assert seen == list(range(n_layers))
+
+
+def test_composed_stages_match_sequential_oracle():
+    """n_layers=5 over 2 stages: applying stage 0's slice then stage 1's
+    == the sequential stack (regression for the dropped-layer bug)."""
+    rng = np.random.default_rng(0)
+    ws = jnp.asarray(rng.normal(size=(5, 8, 8)).astype(np.float32) * 0.3)
+    x = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+
+    def layer_fn(xc, w):
+        return jnp.tanh(xc @ w)
+
+    want = x
+    for i in range(5):
+        want = layer_fn(want, ws[i])
+
+    got = x
+    for stage in range(2):
+        cp, per = pipeline.slice_chunk_params(ws, 5, 2, stage)
+        got = pipeline.masked_chunk_apply(layer_fn, cp, per, got)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+# -- schedule builder --------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,m,s,v", [
+    ("gpipe", 4, 2, 1), ("gpipe", 8, 4, 1), ("1f1b", 4, 2, 1),
+    ("1f1b", 16, 8, 1), ("interleaved", 8, 4, 2), ("interleaved", 8, 2, 3),
+])
+def test_build_schedule_invariants(name, m, s, v):
+    """The builder self-checks tightness / lane collisions; verify the
+    table is complete: every (mb, chunk) appears once per lane."""
+    sch = pipeline.build_schedule(name, m, s, v)
+    n_virtual = s * sch.virtual
+    for mb_tab, ch_tab in ((sch.f_mb, sch.f_chunk), (sch.b_mb, sch.b_chunk)):
+        units = sorted((int(mb), int(q))
+                       for mb, q in zip(mb_tab.ravel(), ch_tab.ravel())
+                       if mb >= 0)
+        assert units == sorted((mb, q) for mb in range(m)
+                               for q in range(n_virtual))
+    assert (sch.f_slot >= 0).sum() == m * n_virtual / s * s
+
+
+def test_1f1b_stash_is_o_n_stage_not_o_m():
+    """The 1F1B memory claim: peak live activations per stage stay O(S)
+    while GPipe's grow with the microbatch count."""
+    s = 4
+    for m in (8, 16, 32, 64):
+        assert pipeline.build_schedule("gpipe", m, s).n_stash == m
+        assert pipeline.build_schedule("1f1b", m, s).n_stash <= 2 * s
+    assert pipeline.build_schedule("interleaved", 32, s, 2).n_stash <= \
+        2 * 2 * s + s
+
+
+def test_1f1b_fewer_ticks_than_gpipe():
+    for m, s in ((8, 4), (16, 8)):
+        assert pipeline.build_schedule("1f1b", m, s).ticks < \
+            pipeline.build_schedule("gpipe", m, s).ticks
+
+
+def test_interleaved_requires_divisible_microbatches():
+    with pytest.raises(ValueError):
+        pipeline.build_schedule("interleaved", 6, 4, 2)
+
+
+# -- executor vs sequential oracle (pod axis size 1) -------------------------
+
+
+def _toy_problem():
+    rng = np.random.default_rng(1)
+    n_layers, d, m, b = 5, 8, 4, 4
+    ws = jnp.asarray(rng.normal(size=(n_layers, d, d)).astype(np.float32)
+                     * 0.3)
+    xs = jnp.asarray(rng.normal(size=(m, b, d)).astype(np.float32))
+    tg = jnp.asarray(rng.normal(size=(m, b, d)).astype(np.float32))
+    return n_layers, d, m, b, ws, xs, tg
+
+
+def _layer_fn(x, w):
+    return jnp.tanh(x @ w)
+
+
+@pytest.mark.parametrize("name,virtual", [("gpipe", 1), ("1f1b", 1),
+                                          ("interleaved", 2)])
+def test_pipeline_matches_sequential_oracle(name, virtual):
+    """All three schedules produce the sequential loss AND grads."""
+    n_layers, d, m, b, ws, xs, tg = _toy_problem()
+    n_virtual = 1 * virtual           # one stage in tier-1
+
+    def oracle(p):
+        losses = []
+        for mb in range(m):
+            x = xs[mb]
+            for i in range(n_layers):
+                x = _layer_fn(x, p[i])
+            losses.append(jnp.mean((x - tg[mb]) ** 2))
+        return jnp.mean(jnp.stack(losses))
+
+    want_loss, want_g = jax.value_and_grad(oracle)(ws)
+
+    sched = pipeline.build_schedule(name, m, 1, virtual)
+
+    def chunk_fn(p, q, mb, x):
+        x = jnp.where(q == 0, xs[mb], x)
+        cp, per = pipeline.slice_chunk_params(p, n_layers, n_virtual, q)
+        return pipeline.masked_chunk_apply(_layer_fn, cp, per, x)
+
+    def loss_fn(p, y, mb):
+        return jnp.mean((y - tg[mb]) ** 2)
+
+    loss, grads = jax.jit(lambda p: pipeline.pipeline_value_and_grad(
+        chunk_fn, loss_fn, p,
+        jax.ShapeDtypeStruct((b, d), np.float32), sched, "pod"))(ws)
+    np.testing.assert_allclose(float(loss), float(want_loss), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(grads), np.asarray(want_g),
+                               rtol=2e-5, atol=1e-7)
+
+
+# -- grad accumulation contract (overlap.py bugfix) --------------------------
+
+
+def test_grad_accumulate_contract_vs_hand_loop():
+    """mean=True (default) returns (mean_loss, MEAN grads); mean=False
+    returns the summed accumulator — asserted against a hand-rolled
+    loop (the docstring used to promise sums while returning means)."""
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(size=(4,)).astype(np.float32))
+    xs = jnp.asarray(rng.normal(size=(3, 4)).astype(np.float32))
+
+    def step_fn(mb):
+        def f(wv):
+            return jnp.sum((wv * mb) ** 2)
+        return jax.value_and_grad(f)(w)
+
+    losses, grads = [], []
+    for i in range(3):
+        l, g = step_fn(xs[i])
+        losses.append(float(l))
+        grads.append(np.asarray(g))
+    want_mean_loss = np.mean(losses)
+    want_sum_g = np.sum(grads, axis=0)
+
+    loss, g = jax.jit(overlap.grad_accumulate(step_fn, 3))(xs)
+    np.testing.assert_allclose(float(loss), want_mean_loss, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(g), want_sum_g / 3, rtol=1e-6)
+
+    loss, g = jax.jit(overlap.grad_accumulate(step_fn, 3, mean=False))(xs)
+    np.testing.assert_allclose(float(loss), want_mean_loss, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(g), want_sum_g, rtol=1e-6)
+
+
+# -- instrumentation (instrument.py binder-aliasing bugfix) ------------------
+
+
+def test_instrument_literal_operand_keeps_binder_alignment():
+    """A scan whose eqn carries a Literal operand (the 0.0 init) BEFORE the
+    tracked arrays: binders must pair with the unfiltered invars (the
+    literal-bound carry binder is skipped), not slide onto the wrong outer
+    operand.  The body reads only ``a`` — under the old filtered-operand
+    mapping, ``b``'s tracking attached to the carry binder and counted a
+    phantom inner read.  (Lives here, not test_substrates.py, because
+    that module importorskips on hypothesis.)"""
+    from jax import lax
+
+    from repro.core import instrument
+
+    def body_region(a, b):
+        def body(c, xs):
+            xa, _ = xs
+            return c * 2.0 + jnp.sum(xa), None
+        out, _ = lax.scan(body, 0.0, (a, b))
+        return out
+
+    rep = instrument.analyze_region(body_region, jnp.ones(3), jnp.ones(3),
+                                    tracked_args=[0, 1], labels=["a", "b"])
+    assert rep.records["a"].reads == 2       # the scan eqn + the body
+    assert rep.records["b"].reads == 1       # the scan eqn ONLY
+
+
+def test_instrument_cond_skips_branch_index_operand():
+    """cond's leading invar is the branch index, not a branch argument —
+    binders must align against the remaining operands."""
+    from jax import lax
+
+    from repro.core import instrument
+
+    def body_region(a, b):
+        return lax.cond(jnp.sum(a) > 0.0,
+                        lambda ops: ops[0] * 2.0,
+                        lambda ops: ops[0] + 1.0, (b,))
+
+    rep = instrument.analyze_region(body_region, jnp.ones(3), jnp.ones(3),
+                                    tracked_args=[0, 1], labels=["a", "b"])
+    assert rep.records["b"].reads >= 2       # the cond eqn + a branch body
+
+
+def test_instrument_while_loop_binder_alignment():
+    """while_loop's two sub-jaxprs bind DIFFERENT operand subsets
+    (cond_consts + carry vs body_consts + carry) — zipping both against
+    the full invars would pair the cond jaxpr's carry binders with body
+    consts and count phantom reads of tracked body operands."""
+    from jax import lax
+
+    from repro.core import instrument
+
+    def body_region(a, b):
+        def cond_f(c):
+            return c[0] < 3
+        def body_f(c):
+            i, acc = c
+            return i + 1, acc + jnp.sum(a) + jnp.sum(b)
+        _, out = lax.while_loop(cond_f, body_f, (0, jnp.float32(0.0)))
+        return out
+
+    rep = instrument.analyze_region(body_region, jnp.ones(3), jnp.ones(3),
+                                    tracked_args=[0, 1], labels=["a", "b"])
+    # one read at the while eqn + one in the body; the cond predicate
+    # (i < 3) must NOT count as a read of a tracked array
+    assert rep.records["a"].reads == 2
+    assert rep.records["b"].reads == 2
+
+
+# -- the managed decision ----------------------------------------------------
+
+
+def test_decide_pipeline_is_argmin():
+    d = cm.decide_pipeline_schedule(4, 1e-3, 1e6, n_layers=16)
+    assert d.schedule in ("gpipe", "1f1b", "interleaved")
+    assert f"{d.schedule}:{d.n_micro}:{d.virtual}" in d.times_s
+    assert d.chosen_s <= min(d.times_s.values()) * (1 + 1e-9)
+    for t in d.times_s.values():
+        assert t > 0 and np.isfinite(t)
+
+
+def test_decide_pipeline_gpipe_bubble_formula():
+    d = cm.decide_pipeline_schedule(4, 1e-3, 1e6, force_schedule="gpipe",
+                                    force_micro=8)
+    assert d.bubble_frac == pytest.approx((4 - 1) / (8 + 4 - 1))
+
+
+def test_decide_pipeline_memory_cap_retires_gpipe():
+    """GPipe stashes the whole batch regardless of M; a stash cap below
+    that retires every gpipe variant and the manager falls back to the
+    O(S)-memory schedules."""
+    d = cm.decide_pipeline_schedule(4, 1e-3, 1e9, n_layers=16,
+                                    stash_cap_bytes=0.5e9)
+    assert d.schedule in ("1f1b", "interleaved")
+    assert not any(k.startswith("gpipe") for k in d.times_s)
+    assert d.stash_bytes <= 0.5e9 * 2 * 4   # slots bounded by 2S
+
+
+def test_decide_pipeline_alpha_dominated_prefers_fewest_ticks():
+    """With negligible compute the tick count (per-message alpha) decides:
+    1f1b has the fewest ticks of the three timetables."""
+    d = cm.decide_pipeline_schedule(8, 1e-9, 1e2, n_layers=16)
+    assert d.schedule == "1f1b"
+
+
+def test_resolve_pipeline_schedule_logs_and_forces():
+    managed.clear_decision_log()
+    d = managed.resolve_pipeline_schedule("pod", 4, 1e-3, 1e6, n_layers=16)
+    rec = managed.decision_log()[-1]
+    assert rec.op == "pipeline_schedule"
+    assert rec.mode == d.schedule and rec.chunks == d.n_micro
+    # bulk pins the unmanaged gpipe baseline; interleaved pins 1f1b
+    assert managed.resolve_pipeline_schedule(
+        "pod", 4, 1e-3, 1e6, mode="bulk").schedule == "gpipe"
+    assert managed.resolve_pipeline_schedule(
+        "pod", 4, 1e-3, 1e6, mode="interleaved").schedule == "1f1b"
+    assert managed.resolve_pipeline_schedule(
+        "pod", 4, 1e-3, 1e6, schedule="interleaved",
+        n_micro=8, virtual=2).n_micro == 8
+
+
+def test_tuner_decide_pipeline_seeds_and_adapts():
+    t = tuner.ScheduleTuner()
+    e = t.decide_pipeline("pod", 4, 16, (8, 128, 64), 1e-3, 1 << 20)
+    assert e.mode in ("gpipe", "1f1b", "interleaved")
+    # measured feedback overrides the seed (iteration k -> k+1)
+    t.record(e.key, "gpipe", 8, 2e-3)
+    t.record(e.key, "interleaved", 8, 1e-3)
+    assert t.entries[e.key].mode == "interleaved"
+    assert t.entries[e.key].chunks == 8
+    # the trial sweep walks PIPELINE_CANDIDATES
+    seen = set()
+    while True:
+        trial = t.next_trial(e.key)
+        if trial is None:
+            break
+        seen.add(trial)
+        t.record(e.key, trial[0], trial[1], 5e-3)
+    assert seen | {("gpipe", 8), ("interleaved", 8)} >= \
+        set(tuner.ScheduleTuner.PIPELINE_CANDIDATES)
+
+
+def test_region_pipeline_declaration_plans_schedule():
+    r = region.CommRegion("train", axis_sizes={"pod": 4})
+    r.pipeline("stage_boundary", axis="pod", n_layers=16,
+               batch_shape=(8, 128, 64), dtype=np.float32,
+               batch_fwd_s=1e-3)
+
+    def body(x):
+        return jnp.tanh(x) @ x.T
+
+    plan = r.plan(body, jnp.ones((8, 8)))
+    entry = plan.entries["stage_boundary"]
+    assert entry.mode in ("gpipe", "1f1b", "interleaved")
+    assert plan.schedule_for("stage_boundary") == entry.mode
+    assert entry.chunks >= 1                      # the microbatch count M
+    assert entry.predicted_interleaved_s <= entry.predicted_bulk_s * (1 + 1e-9)
