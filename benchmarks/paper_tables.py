@@ -288,6 +288,39 @@ def serve_schedule_model() -> list[tuple[str, float, str]]:
     return rows
 
 
+def moe_dispatch_model() -> list[tuple[str, float, str]]:
+    """The MoE dispatch knob (PR 5 tentpole, same alpha-beta machinery):
+    predicted seconds-per-layer for bulk a2a vs chunked-stream vs the
+    dense fallback on the moonshot production point — 8192 local tokens,
+    D = 2048, 64 experts top-6 with F = 1408, EP = 16, bf16 — per
+    machine, declared cf = 1.25 vs a measured 4x-skewed routing.  The
+    chosen row is what the managed runtime picks: on machines with real
+    link bandwidth the stream hides the capacity-buffer wire under the
+    grouped-GEMM compute; when instrumented skew inflates the capacity
+    factor the a2a bytes balloon and the capacity-free dense fallback
+    crosses over."""
+    rows = []
+    t_loc, d_model, e, k, f, ep = 8192, 2048, 64, 6, 1408, 16
+    for hw in (cm.HECTOR_XE6, cm.HELIOS_BULLX, cm.JUQUEEN_BGQ, cm.TPU_V5E):
+        for tag, imb in (("declared", None), ("skewed", 4.0)):
+            d = cm.decide_moe_dispatch(
+                t_loc, d_model, e, k, f, ep, mults=3, dtype_bytes=2,
+                capacity_factor=1.25, measured_imbalance=imb, hw=hw)
+            for variant in sorted(d.times_s):
+                sched, g = variant.split(":")
+                rows.append((f"moe_dispatch_{hw.name}_{tag}_{sched}_g{g}",
+                             d.times_s[variant] * 1e6,
+                             f"x{d.bulk_s / d.times_s[variant]:.2f} vs "
+                             "bulk"))
+            rows.append((f"moe_dispatch_{hw.name}_{tag}_chosen",
+                         d.chosen_s * 1e6,
+                         f"{d.schedule} g={d.g} cf={d.capacity_factor:g} "
+                         f"picked by cost model (pred "
+                         f"x{d.predicted_speedup:.2f}, C={d.capacity}, "
+                         f"a2a={d.a2a_bytes/1e6:.0f}MB)"))
+    return rows
+
+
 def all_tables() -> list[tuple[str, float, str]]:
     rows = []
     rows += table1_stream_in_region()
@@ -300,4 +333,5 @@ def all_tables() -> list[tuple[str, float, str]]:
     rows += attention_schedule_model()
     rows += pipeline_schedule_model()
     rows += serve_schedule_model()
+    rows += moe_dispatch_model()
     return rows

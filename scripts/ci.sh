@@ -33,6 +33,17 @@ echo "$pipe_out" | grep -q "decision pipeline_schedule(" || {
 echo "$pipe_out" | grep -q "loss" || {
     echo "FAIL: pipeline smoke produced no training losses"; exit 1; }
 
+echo "== moe smoke (managed expert dispatch, --moe-dispatch auto) =="
+moe_out="$(XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m repro.launch.train --arch moonshot-v1-16b-a3b --reduced \
+    --steps 2 --moe-dispatch auto --mesh 2x2 --batch 8 --seq 32 \
+    --ckpt /tmp/mdmp_ci_moe_ckpt)"
+echo "$moe_out" | head -6
+echo "$moe_out" | grep -q "decision moe_dispatch(" || {
+    echo "FAIL: moe smoke missing the moe_dispatch decision"; exit 1; }
+echo "$moe_out" | grep -q "loss" || {
+    echo "FAIL: moe smoke produced no training losses"; exit 1; }
+
 echo "== benchmark smoke (python -m benchmarks.run) =="
 out="$(MDMP_BENCH_REPS="${MDMP_BENCH_REPS:-2}" python -m benchmarks.run)"
 echo "$out" | tail -40
@@ -73,6 +84,19 @@ echo "$out" | grep -q "serve_sched_tpu_v5e_chosen" || {
     echo "FAIL: serve schedule model rows missing"; exit 1; }
 echo "$out" | grep -q "serve_decision_.*trail=serve_schedule" || {
     echo "FAIL: serve decision trail entry missing"; exit 1; }
+# MoE smoke: the dispatch sweep must have run (schedules asserted
+# allclose to the bulk oracle in-suite, capacity adaptation rows from the
+# instrumented routing), the modeled schedule table must be present, and
+# the decision trail must contain a moe_dispatch entry with the
+# tuner-measured winner.
+echo "$out" | grep -q "moe_dispatch_.*_capacity_adapt" || {
+    echo "FAIL: instrumented capacity-adaptation rows missing"; exit 1; }
+echo "$out" | grep -q "moe_dispatch_.*allclose=bulk" || {
+    echo "FAIL: measured moe dispatch sweep rows missing"; exit 1; }
+echo "$out" | grep -q "moe_dispatch_tpu_v5e_.*_chosen" || {
+    echo "FAIL: moe dispatch model rows missing"; exit 1; }
+echo "$out" | grep -q "moe_dispatch_decision_.*trail=moe_dispatch" || {
+    echo "FAIL: moe dispatch decision trail entry missing"; exit 1; }
 echo "$out" | grep -q "measured_suite,0.00,ERROR" && {
     echo "FAIL: measured suite subprocess errored"; exit 1; }
 echo "CI OK"

@@ -20,6 +20,15 @@ class MoEConfig:
     router_jitter: float = 0.0
     # EP via all_to_all when n_experts % tp == 0, else expert-TP dense path
     impl: str = "auto"      # auto | ep_a2a | expert_tp
+    # -- managed dispatch schedule (PR 5): how routed tokens cross the EP
+    # axis.  "bulk" = one all_to_all into capacity buffers (the unmanaged
+    # baseline); "stream" = capacity chunks ppermute'd around the EP ring
+    # under the expert FFN; "dense" = no dispatch (every rank runs its
+    # local experts on the full token set, reduce-scattered back); "auto"
+    # = core/cost_model.decide_moe_dispatch picks (schedule, g,
+    # capacity_factor) and logs the DecisionRecord -------------------------
+    dispatch: str = "bulk"  # bulk | stream | dense | auto
+    dispatch_g: int = 0     # stream chunk count (0 = cost-model pick)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -23,6 +23,8 @@ import dataclasses
 from typing import Any, Callable, Sequence
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.extend import core as jcore
 
 
@@ -148,6 +150,89 @@ def _walk(jaxpr: jcore.Jaxpr, tracked: dict[Any, str],
                 depth = _walk(sub, {**tracked, **inner_tracked}, records,
                               depth)
     return depth
+
+
+# ---------------------------------------------------------------------------
+# MoE routing statistics — the data-dependent communication counters
+# ---------------------------------------------------------------------------
+#
+# Unlike halo/attention/pipeline traffic, MoE dispatch bytes are decided by
+# a ROUTER at runtime: the trace-time jaxpr walk above cannot see them.
+# This is exactly the case where the paper's runtime read/write counters
+# earn their keep, so the routing path gets true runtime instrumentation:
+# ``moe_routing_stats`` is traceable (cheap — one histogram per layer) and
+# ``capture_routing`` records host-side summaries that feed the
+# iteration-(k)->(k+1) capacity/schedule re-resolution
+# (cost_model.decide_moe_dispatch's measured_* inputs).
+
+
+@dataclasses.dataclass
+class RoutingRecord:
+    """Host-side routing profile of one MoE dispatch call site."""
+    label: str
+    n_experts: int
+    capacity: int
+    tokens: int
+    top_k: int
+    histogram: np.ndarray          # [E] routed (t, k) assignments
+    drop_rate: float               # fraction of assignments over capacity
+    occupancy: float               # kept rows / (E * C) buffer slots
+    imbalance: float               # max expert load / mean expert load
+
+
+def moe_routing_stats(top_idx, n_experts: int, capacity: int) -> dict:
+    """Routing statistics from a router's top-k expert ids [T, K]
+    (traceable — returns jnp values usable inside jit):
+
+      histogram [E]   assignments per expert,
+      drop_rate []    fraction of (t, k) assignments past capacity,
+      occupancy []    realised buffer occupancy (kept / E*C),
+      imbalance []    max load / mean load (feeds the capacity-factor
+                      re-resolution: cf >= imbalance drops nothing).
+    """
+    flat = top_idx.reshape(-1)
+    # scatter-add histogram: O(T*K), not the O(T*K*E) one-hot blow-up
+    hist = jnp.zeros(n_experts, jnp.float32).at[flat].add(1.0)
+    kept = jnp.minimum(hist, float(capacity))
+    total = jnp.maximum(jnp.float32(flat.shape[0]), 1.0)
+    mean_load = jnp.maximum(jnp.mean(hist), 1e-9)
+    return {
+        "histogram": hist,
+        "drop_rate": 1.0 - jnp.sum(kept) / total,
+        "occupancy": jnp.sum(kept) / float(n_experts * capacity),
+        "imbalance": jnp.max(hist) / mean_load,
+    }
+
+
+_ROUTING_LOG: list[RoutingRecord] = []
+
+
+def capture_routing(label: str, top_idx, n_experts: int,
+                    capacity: int) -> RoutingRecord:
+    """Summarise CONCRETE routed ids and append to the routing log (the
+    runtime counter readout: benchmarks/tuners call this on a sampled
+    batch between steps, then hand ``imbalance``/``drop_rate`` back to
+    ``managed.resolve_moe_dispatch``)."""
+    t, k = np.asarray(top_idx).shape
+    stats = jax.tree.map(np.asarray,
+                         moe_routing_stats(jnp.asarray(top_idx), n_experts,
+                                           capacity))
+    rec = RoutingRecord(
+        label=label, n_experts=n_experts, capacity=capacity, tokens=t,
+        top_k=k, histogram=stats["histogram"],
+        drop_rate=float(stats["drop_rate"]),
+        occupancy=float(stats["occupancy"]),
+        imbalance=float(stats["imbalance"]))
+    _ROUTING_LOG.append(rec)
+    return rec
+
+
+def routing_log() -> list[RoutingRecord]:
+    return list(_ROUTING_LOG)
+
+
+def clear_routing_log() -> None:
+    _ROUTING_LOG.clear()
 
 
 def analyze_region(fn: Callable, *example_args: Any,

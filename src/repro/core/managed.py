@@ -991,6 +991,133 @@ def resolve_serve_schedule(axis_name: str, batch_slots: int,
 
 
 # ---------------------------------------------------------------------------
+# Managed expert dispatch (expert parallelism)
+#
+# The paper's Figure-3 strategy mapped onto MoE token routing: the [E, C,
+# D] capacity buffers are the declared communication, and instead of one
+# bulk all_to_all each way around the expert FFN, the ring streams one
+# rank-block at a time — the NEXT block's ppermute is issued before the
+# current block's expert FFN runs, and each of the g capacity chunks'
+# results returns home with its own permute as soon as it is computed.
+# Equivalent math to a2a -> ffn -> reverse a2a (the bulk oracle); the
+# wire hides under the FFN once compute dominates the link.  Plain
+# autodiff streams the backward ring (every op is a linear permute, a
+# dynamic slice/update, or the expert_fn the caller differentiates).
+# ---------------------------------------------------------------------------
+
+
+def managed_expert_stream(buffers: Array, counts: Array, axis_name: str,
+                          expert_fn, *, g: int = 1) -> Array:
+    """Stream expert-capacity buffers around ``axis_name``.
+
+    buffers: [E, C, D] capacity rows of THIS rank's tokens (expert-major,
+    experts sharded E_loc = E/n per rank); counts: [E] int32 valid-row
+    counts (rows past the count are zero padding); ``expert_fn(block,
+    valid)`` applies this rank's LOCAL experts to an [E_loc, c, D] block
+    (c = C/g) with per-expert valid counts [E_loc].  Returns [E, C, D]:
+    row-block e holds the processed rows of expert e for MY tokens —
+    exactly ``managed_all_to_all -> ffn -> reverse managed_all_to_all``.
+    """
+    n = _axis_size(axis_name)
+    e, c, d = buffers.shape
+    if n == 1:
+        return expert_fn(buffers, counts)
+    assert e % n == 0, (e, n)
+    eff_g = g if (g >= 1 and c % max(1, g) == 0) else 1
+    cs = c // eff_g
+    e_loc = e // n
+    idx = lax.axis_index(axis_name)
+    blocks = buffers.reshape(n, e_loc, c, d)
+    cnt_blocks = counts.reshape(n, e_loc)
+
+    _resolve("expert_stream", axis_name, buffers, "interleaved", eff_g,
+             "all_to_all")
+
+    out = None
+    cur = _dyn_block(blocks, idx)
+    cur_cnt = _dyn_block(cnt_blocks, idx)
+    for s in range(n):
+        if s + 1 < n:
+            # issue the NEXT block's transfer before this block's FFN
+            # (the MDMP intermingling)
+            perm_fwd = _ring_perm(n, shift=s + 1)
+            send_to = jnp.mod(idx + s + 1, n)
+            nxt = lax.ppermute(_dyn_block(blocks, send_to), axis_name,
+                               perm_fwd)
+            nxt_cnt = lax.ppermute(_dyn_block(cnt_blocks, send_to),
+                                   axis_name, perm_fwd)
+        rets = []
+        for j in range(eff_g):
+            vj = jnp.clip(cur_cnt - j * cs, 0, cs)
+            yj = expert_fn(cur[:, j * cs:(j + 1) * cs], vj)
+            if s > 0:
+                # the chunk's result returns to its source rank while the
+                # next chunk's FFN runs
+                yj = lax.ppermute(yj, axis_name, _ring_perm(n, shift=-s))
+            rets.append(yj)
+        y = rets[0] if len(rets) == 1 else jnp.concatenate(rets, axis=1)
+        if out is None:
+            out = jnp.zeros((e, c, d), y.dtype)
+        # what arrived in the return permute: rank idx+s's experts' output
+        # on MY capacity rows
+        src_e = jnp.mod(idx + s, n) * e_loc
+        out = lax.dynamic_update_slice_in_dim(out, y, src_e, axis=0)
+        if s + 1 < n:
+            cur, cur_cnt = nxt, nxt_cnt
+    return out
+
+
+def resolve_moe_dispatch(axis_name: str, axis_size: int, tokens_local: int,
+                         d_model: int, n_experts: int, top_k: int,
+                         d_ff_expert: int, *, mults: int = 3,
+                         dtype_bytes: int = 2,
+                         capacity_factor: float = 1.25,
+                         measured_imbalance: float | None = None,
+                         measured_drop_rate: float | None = None,
+                         measured_occupancy: float | None = None,
+                         layout: str = "ep_a2a",
+                         mode: str | None = None,
+                         schedule: str | None = None,
+                         g: int | None = None,
+                         capacity_factor_override: float | None = None
+                         ) -> cost_model.MoEDispatchDecision:
+    """The managed-runtime entry for the MoE dispatch knob (bulk a2a vs
+    chunked-stream vs dense-fallback, plus the capacity factor) — the
+    analogue of ``resolve_attention_schedule`` for expert parallelism.
+    Called at trace/plan time with static shapes; the chosen (schedule,
+    g, capacity_factor) feeds ``models/moe.py`` dispatch and lands in
+    the decision log.  ``measured_*`` come from
+    ``instrument.capture_routing`` — the runtime routing counters that
+    re-resolve the schedule and the capacity online.
+
+    ``mode='bulk'`` pins the paper-faithful unmanaged baseline;
+    ``mode='interleaved'`` pins the always-stream schedule; an explicit
+    ``schedule`` (the tuner's measured winner, or a pinned
+    cfg.moe.dispatch) wins over the ambient mode.  The DecisionRecord
+    reuses ``chunks`` to carry the stream chunk count g."""
+    cfg = get_config()
+    eff_mode = mode or cfg.mode
+    force = schedule if schedule is not None else \
+        {"bulk": "bulk", "interleaved": "stream"}.get(eff_mode)
+    decision = cost_model.decide_moe_dispatch(
+        tokens_local, d_model, n_experts, top_k, d_ff_expert, axis_size,
+        mults=mults, dtype_bytes=dtype_bytes,
+        capacity_factor=capacity_factor,
+        measured_imbalance=measured_imbalance,
+        measured_drop_rate=measured_drop_rate,
+        measured_occupancy=measured_occupancy, hw=cfg.hw, layout=layout,
+        force_schedule=force, force_g=g,
+        force_capacity_factor=capacity_factor_override)
+    if cfg.log_decisions:
+        _DECISION_LOG.append(DecisionRecord(
+            op="moe_dispatch", axis=axis_name, nbytes=decision.a2a_bytes,
+            mode=decision.schedule, chunks=decision.g,
+            predicted_bulk_s=decision.bulk_s,
+            predicted_interleaved_s=decision.chosen_s))
+    return decision
+
+
+# ---------------------------------------------------------------------------
 # Convenience: sequence-parallel psum replacement
 # ---------------------------------------------------------------------------
 

@@ -174,6 +174,29 @@ class CommRegion:
             collective="pipeline",
             shape=(int(n_layers), int(round(batch_fwd_s * 1e12)))))
 
+    def moe(self, label: str, *, axis: str, tokens_local: int,
+            d_model: int, n_experts: int, top_k: int, d_ff_expert: int,
+            dtype, capacity_factor: float = 1.25,
+            mults: int = 3) -> None:
+        """Declare an MoE expert-dispatch call site (experts sharded by
+        id over ``axis``; ``tokens_local`` routed top-k per layer).
+        Planning runs the three-way dispatch decision for it: the
+        resulting PlanEntry's ``mode`` is the chosen schedule ("bulk" |
+        "stream" | "dense", read back via ``plan.schedule_for(label)``)
+        and ``chunks`` the stream chunk count g; the chosen capacity
+        factor rides in the decision the managed runtime logs."""
+        import numpy as np
+        ib = np.dtype(dtype).itemsize
+        cap = cost_model.moe_capacity(tokens_local, top_k, n_experts,
+                                      capacity_factor)
+        self._specs.append(CommSpec(
+            label=label, kind="moe", axis=axis,
+            nbytes=n_experts * cap * d_model * ib, collective="moe",
+            shape=(int(tokens_local), int(d_model), int(n_experts),
+                   int(top_k), int(d_ff_expert),
+                   int(round(capacity_factor * 1000)), int(mults),
+                   int(ib))))
+
     def serve(self, label: str, *, axis: str, batch_slots: int,
               mean_prompt: int, mean_new: int, n_params: int, dtype,
               max_prompt: int | None = None) -> None:
@@ -260,6 +283,24 @@ class CommRegion:
                 entries[spec.label] = PlanEntry(
                     spec=spec, mode=d.schedule, chunks=d.n_micro,
                     overlap_budget=budget, predicted_bulk_s=d.bulk_s,
+                    predicted_interleaved_s=d.chosen_s)
+                continue
+            if spec.kind == "moe":
+                # The dispatch knob: bulk a2a vs chunked-stream vs dense
+                # fallback plus the capacity factor, routed through the
+                # managed runtime so the choice lands in the MDMP
+                # decision log.
+                (tokens_local, d_model, n_experts, top_k, d_ff_expert,
+                 cf_milli, mults, ib) = spec.shape
+                n = self.axis_sizes.get(spec.axis, 1)
+                with managed.use_config(self.config):
+                    d = managed.resolve_moe_dispatch(
+                        spec.axis, n, tokens_local, d_model, n_experts,
+                        top_k, d_ff_expert, mults=mults, dtype_bytes=ib,
+                        capacity_factor=cf_milli / 1000.0)
+                entries[spec.label] = PlanEntry(
+                    spec=spec, mode=d.schedule, chunks=d.g,
+                    overlap_budget=1.0, predicted_bulk_s=d.bulk_s,
                     predicted_interleaved_s=d.chosen_s)
                 continue
             if spec.kind == "serve":

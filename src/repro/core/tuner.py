@@ -73,6 +73,12 @@ class ScheduleTuner:
     PIPELINE_CANDIDATES = (("gpipe", 8), ("1f1b", 8), ("1f1b", 16),
                            ("interleaved", 8))
 
+    #: candidate (schedule, g) variants for MoE dispatch call sites —
+    #: ``mode`` carries the schedule (bulk a2a / chunked-stream /
+    #: dense-fallback), ``chunks`` the stream chunk count g
+    MOE_CANDIDATES = (("bulk", 1), ("stream", 2), ("stream", 4),
+                      ("dense", 1))
+
     def __init__(self, hw: HardwareModel = TPU_V5E,
                  path: str | None = None):
         self.hw = hw
@@ -165,6 +171,40 @@ class ScheduleTuner:
             self._entries[key] = entry
         return entry
 
+    def decide_moe(self, axis: str, axis_size: int, tokens_local: int,
+                   d_model: int, n_experts: int, top_k: int,
+                   d_ff_expert: int, *, dtype_str: str = "bfloat16",
+                   dtype_bytes: int = 2, mults: int = 3,
+                   capacity_factor: float = 1.25) -> TunerEntry:
+        """Schedule decision for an MoE dispatch call site: seeded from
+        the three-way dispatch cost model (``mode`` carries the schedule
+        name, ``chunks`` the stream chunk count g), then overridden by
+        measured step seconds fed back through
+        ``record(key, "stream", g, seconds)`` — and re-resolved online
+        from instrumented routing (imbalance/drop rate) through
+        ``managed.resolve_moe_dispatch``'s measured_* inputs, the way
+        the serving engine re-resolves after measured quanta.  Persisted
+        like every other entry."""
+        # the capacity factor is part of the call-site signature: it sizes
+        # the [E, C, D] buffers every schedule moves, so different cf =
+        # different operand shapes = a separate tuned entry
+        cap = cost_model.moe_capacity(tokens_local, top_k, n_experts,
+                                      capacity_factor)
+        key = call_site_key(
+            "moe_dispatch",
+            (tokens_local, d_model, n_experts, top_k, d_ff_expert, cap),
+            dtype_str, axis, axis_size)
+        entry = self._entries.get(key)
+        if entry is None:
+            d = cost_model.decide_moe_dispatch(
+                tokens_local, d_model, n_experts, top_k, d_ff_expert,
+                axis_size, mults=mults, dtype_bytes=dtype_bytes,
+                capacity_factor=capacity_factor, hw=self.hw)
+            entry = TunerEntry(key=key, mode=d.schedule, chunks=d.g,
+                               predicted_s=d.chosen_s)
+            self._entries[key] = entry
+        return entry
+
     def decide_serve(self, batch_slots: int, mean_prompt: int,
                      mean_new: int, n_params: int, *,
                      dtype_str: str = "bfloat16", dtype_bytes: int = 2,
@@ -222,6 +262,8 @@ class ScheduleTuner:
                       if key.startswith("serve")
                       else self.PIPELINE_CANDIDATES
                       if key.startswith("pipeline")
+                      else self.MOE_CANDIDATES
+                      if key.startswith("moe")
                       else self.CANDIDATES)
         entry = self._entries.get(key)
         if entry is None:

@@ -40,6 +40,10 @@ def main() -> None:
     ap.add_argument("--microbatches", type=int, default=None,
                     help="pipeline microbatch count M (default: the "
                          "cost model's pick)")
+    ap.add_argument("--moe-dispatch", default=None,
+                    choices=["bulk", "stream", "dense", "auto"],
+                    help="MoE expert-dispatch schedule (auto = managed "
+                         "cost-model decision, logged per layer)")
     ap.add_argument("--mesh", default=None,
                     help="e.g. 2x4 (data x model) or 2x2x2 "
                          "(pod x data x model); default = all devices "
@@ -49,8 +53,15 @@ def main() -> None:
     ap.add_argument("--compress-pod", action="store_true")
     args = ap.parse_args()
 
+    import dataclasses
     cfg = (configs.get_reduced(args.arch) if args.reduced
            else configs.get_config(args.arch))
+    if args.moe_dispatch is not None:
+        if cfg.moe is None:
+            ap.error(f"--moe-dispatch set but {args.arch} has no MoE "
+                     "layers")
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, dispatch=args.moe_dispatch))
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split("x"))
         axes = (("pod", "data", "model") if len(dims) == 3
@@ -96,6 +107,18 @@ def main() -> None:
     params, opt, s0 = (loop.resume_or_init() if args.resume
                        else loop.init_state())
     out = loop.run(params, opt, s0)
+    if args.moe_dispatch is not None:
+        # the dispatch decision fires at trace time (first step); print
+        # the unique trail entries the managed runtime logged
+        seen = set()
+        for rec in managed_lib.decision_log():
+            key = (rec.op, rec.mode, rec.chunks, rec.nbytes)
+            if rec.op == "moe_dispatch" and key not in seen:
+                seen.add(key)
+                print(f"decision moe_dispatch({rec.mode} g={rec.chunks} "
+                      f"axis={rec.axis} a2a={rec.nbytes/1e3:.1f}kB "
+                      f"bulk={rec.predicted_bulk_s*1e3:.3f}ms "
+                      f"chosen={rec.predicted_interleaved_s*1e3:.3f}ms)")
     for h in out["history"][:: max(1, len(out["history"]) // 10)]:
         print(f"  step {h['step']:4d} loss {h['loss']:.4f} "
               f"{h['time_s']:.2f}s")

@@ -1,19 +1,44 @@
-"""Mixture-of-Experts — two dispatch regimes (DESIGN.md §3.3):
+"""Mixture-of-Experts — two layout regimes x three managed dispatch
+schedules (DESIGN.md §3.3, PR 5 tentpole).
+
+Layouts:
 
 ``ep_a2a``   (moonshot: 64 experts % TP16 == 0): experts sharded by expert
   id over the ``model`` axis; capacity-limited token dispatch crosses the
-  axis via MDMP managed all_to_all (chunked/interleaved schedulable — the
-  paper's "send tokens for expert e as soon as routed").  Tokens stay in
-  their local sequence shard: no sequence gather needed at all.
+  axis.  Tokens stay in their local sequence shard: no sequence gather
+  needed at all.
 
 ``expert_tp`` (grok: 8 experts on a TP16 axis): every expert's FFN is
   sharded over the ``model`` axis like a dense MLP; dispatch is local
   against the sequence-gathered activations and the down-projection
   returns to sequence shards through a reduce-scatter ring.
 
+Dispatch schedules (``cfg.moe.dispatch``, managed end-to-end):
+
+``bulk``     one managed all_to_all of the [E, C, D] capacity buffers each
+             way around the expert FFN — the unmanaged baseline and the
+             numerical oracle.
+``stream``   the capacity buffers split into g chunks and streamed around
+             the EP axis (``managed.managed_expert_stream``): each ring
+             block's ppermute is issued before the previous block's
+             expert FFN, hiding the wire under compute like PR 2's ring.
+``dense``    no dispatch: every rank runs its LOCAL experts on the full
+             token set gate-masked and reduce-scatters — capacity-free
+             (never drops a token), wins when the t*D token bytes
+             undercut the 2*E*C*D a2a bytes.
+``auto``     ``core/cost_model.decide_moe_dispatch`` picks (schedule, g,
+             capacity_factor) per call site and logs the DecisionRecord
+             (the managed-runtime role), re-resolved online from
+             ``instrument.capture_routing`` statistics.
+
 Dispatch is index-based (sort + gather, GShard capacity semantics) — the
 one-hot [T, E, C] dispatch tensor would be terabytes at 32k-token
-microbatches.  Both paths add a Switch-style load-balancing aux loss.
+microbatches.  Capacity is ``moe.dispatch.capacity_for`` (rounds UP — the
+seed floored, dropping tokens even at capacity_factor=1.0 balanced).  The
+expert FFN itself runs through ``kernels/grouped_matmul.py``: the
+per-expert valid counts (from ``dispatch_indices``' keep mask) ride in
+scalar-prefetch SMEM so padded capacity rows cost no FLOPs.  Both paths
+add a Switch-style load-balancing aux loss.
 """
 
 from __future__ import annotations
@@ -27,10 +52,18 @@ from jax import lax
 from repro.configs.base import ModelConfig
 from repro.core import managed
 from repro.core.overlap import fsdp_gather
+from repro.kernels import grouped_matmul
 from repro.models import layers
+from repro.moe.dispatch import (capacity_for, combine_from_buffers,
+                                dispatch_indices, expert_counts,
+                                gather_to_buffers)
 from repro.parallel.sharding import MeshCtx
 
 Array = jax.Array
+
+__all__ = ["moe_block", "moe_block_ep", "moe_block_expert_tp",
+           "moe_block_decode", "capacity_for", "dispatch_indices",
+           "expert_counts", "gather_to_buffers", "combine_from_buffers"]
 
 
 def _router(x: Array, w_router: Array, n_experts: int, top_k: int
@@ -51,105 +84,132 @@ def _router(x: Array, w_router: Array, n_experts: int, top_k: int
     return gates, top_idx, aux
 
 
-def dispatch_indices(top_idx: Array, n_experts: int, capacity: int
-                     ) -> tuple[Array, Array, Array, Array]:
-    """Capacity-limited dispatch bookkeeping (index-based).
-
-    top_idx: [T, K] expert ids.  Returns
-      dest  [T*K] slot in the [E*C] buffer (or E*C for dropped entries),
-      tok   [T*K] source token of each (t, k) entry in expert-sorted order,
-      keep  [T*K] 1.0 where the entry fit under capacity,
-      order [T*K] the expert-major argsort permuting flat (t, k) entries
-            into the order of the three arrays above (combine_from_buffers
-            uses it to align the gate weights).
-    """
-    t, k = top_idx.shape
-    flat_e = top_idx.reshape(t * k)
-    order = jnp.argsort(flat_e, stable=True)            # expert-major order
-    sorted_e = flat_e[order]
-    tok = order // k
-    # position of each entry within its expert's buffer
-    pos = jnp.arange(t * k) - jnp.searchsorted(sorted_e,
-                                               sorted_e, side="left")
-    keep = (pos < capacity).astype(jnp.float32)
-    dest = jnp.where(pos < capacity, sorted_e * capacity + pos,
-                     n_experts * capacity)               # overflow bucket
-    return dest, tok, keep, order
-
-
-def gather_to_buffers(x2: Array, dest: Array, tok: Array, keep: Array,
-                      n_experts: int, capacity: int) -> Array:
-    """x2: [T, D] -> expert buffers [E, C, D] (dropped tokens zeroed)."""
-    d = x2.shape[-1]
-    rows = x2[tok] * keep[:, None].astype(x2.dtype)
-    buf = jnp.zeros((n_experts * capacity + 1, d), x2.dtype)
-    buf = buf.at[dest].set(rows, mode="drop")
-    return buf[:-1].reshape(n_experts, capacity, d)
-
-
-def combine_from_buffers(out: Array, dest: Array, tok: Array, keep: Array,
-                         gates: Array, order: Array, t: int) -> Array:
-    """out: [E, C, D] -> y [T, D], weighting by the (t, k) gate.
-    dest/tok/keep are in expert-sorted order; ``order`` permutes the flat
-    [T*K] gate entries into that order."""
-    e, c, d = out.shape
-    flat = jnp.concatenate([out.reshape(e * c, d),
-                            jnp.zeros((1, d), out.dtype)])
-    k = gates.shape[1]
-    g = gates.reshape(t * k)[order]
-    rows = flat[dest] * (g * keep)[:, None].astype(out.dtype)
-    y = jnp.zeros((t, d), out.dtype)
-    return y.at[tok].add(rows)
-
-
 def _expert_ffn(h: Array, w1: Array, w1_gate: Array | None, w2: Array,
-                mlp: str) -> Array:
-    """Batched expert FFN.  h: [E, C, D]; w1 (+w1_gate): [E, D, F];
-    w2: [E, F, D]."""
-    u = jnp.einsum("ecd,edf->ecf", h, w1)
-    if layers.gated(mlp):
-        g = jnp.einsum("ecd,edf->ecf", h, w1_gate)
-        act = layers.activation(mlp, u, g)
-    else:
-        act = layers.activation(mlp, u, None)
-    return jnp.einsum("ecf,efd->ecd", act, w2)
+                mlp: str, valid: Array) -> Array:
+    """Batched expert FFN over capacity groups.  h: [G, C, D] (G a
+    multiple of the expert count); w1 (+w1_gate): [E, D, F]; w2:
+    [E, F, D]; ``valid`` [G] = per-group kept-row counts — the
+    grouped-expert GEMM skips padded capacity rows."""
+    return grouped_matmul.grouped_expert_ffn(
+        h, w1, w1_gate, w2, valid, mlp=mlp)
 
 
-# ---------------------------------------------------------------------------
-# ep_a2a: expert-parallel all_to_all dispatch
-# ---------------------------------------------------------------------------
+def _resolve_dispatch(cfg: ModelConfig, ctx: MeshCtx, tokens_local: int,
+                      axis_size: int, layout: str
+                      ) -> tuple[str, int, float]:
+    """Route the dispatch knob through the managed runtime (logged as a
+    DecisionRecord(op="moe_dispatch") per call site — once per traced
+    layer like attn_impl="auto").  An explicit ``cfg.moe.dispatch`` wins
+    over the ambient mdmp mode; "auto" lets the cost model pick
+    (schedule, g, capacity_factor) from the static shapes, priced for
+    THIS layout's wire (ep a2a vs expert_tp sequence AG/RS)."""
+    e = cfg.moe
+    decision = managed.resolve_moe_dispatch(
+        "model", axis_size, tokens_local, cfg.d_model, e.n_experts,
+        e.top_k, e.d_ff_expert,
+        mults=3 if layers.gated(cfg.mlp) else 2,
+        dtype_bytes=jnp.dtype(cfg.dtype).itemsize,
+        capacity_factor=e.capacity_factor, layout=layout,
+        mode=ctx.mdmp_mode,
+        schedule=None if e.dispatch == "auto" else e.dispatch,
+        g=e.dispatch_g or None)
+    return decision.schedule, decision.g, decision.capacity_factor
 
 
-def moe_block_ep(x: Array, params: dict, cfg: ModelConfig, ctx: MeshCtx
-                 ) -> tuple[Array, Array]:
-    """x: [B, S_loc, D] -> (y, aux_loss).  Experts sharded by id over
-    'model'; tokens routed across the axis with managed all_to_all."""
-    e_cfg = cfg.moe
-    b, s_loc, d = x.shape
-    t = b * s_loc
-    tp = ctx.tp
-    e = e_cfg.n_experts
-    cap = max(1, int(t * e_cfg.top_k / e * e_cfg.capacity_factor))
-
-    x2 = x.reshape(t, d)
-    gates, top_idx, aux = _router(x2, params["w_router"], e, e_cfg.top_k)
-    dest, tok, keep, order = dispatch_indices(top_idx, e, cap)
-    buffers = gather_to_buffers(x2, dest, tok, keep, e, cap)
-
-    # tokens cross the EP axis: [E, C, D] -> [E_loc, tp*C, D]
-    recv = managed.managed_all_to_all(
-        buffers, "model", split_axis=0, concat_axis=1, mode=ctx.mdmp_mode)
-
+def _gathered_ffn_weights(params: dict, cfg: ModelConfig, ctx: MeshCtx
+                          ) -> tuple[Array, Array | None, Array]:
     w1 = fsdp_gather(params["w1"], "data", axis=1, mode=ctx.mdmp_mode)
     w1g = (fsdp_gather(params["w1_gate"], "data", axis=1,
                        mode=ctx.mdmp_mode)
            if layers.gated(cfg.mlp) else None)
     w2 = fsdp_gather(params["w2"], "data", axis=2, mode=ctx.mdmp_mode)
-    out = _expert_ffn(recv, w1, w1g, w2, cfg.mlp)
+    return w1, w1g, w2
 
-    # route results back and combine with gate weights
-    back = managed.managed_all_to_all(
-        out, "model", split_axis=1, concat_axis=0, mode=ctx.mdmp_mode)
+
+# ---------------------------------------------------------------------------
+# ep_a2a: expert-parallel dispatch across the 'model' axis
+# ---------------------------------------------------------------------------
+
+
+def _dense_fallback_ep(x2: Array, gates: Array, top_idx: Array, w1: Array,
+                       w1g: Array | None, w2: Array, cfg: ModelConfig,
+                       ctx: MeshCtx, n_experts: int) -> Array:
+    """The no-dispatch schedule: all-gather the t*D tokens, run this
+    rank's E_loc experts on the FULL token set gate-masked, reduce-scatter
+    the outputs back to sequence shards.  Capacity-free — no token is
+    ever dropped — at the price of E (not top_k) expert rows per token."""
+    tp = ctx.tp
+    e_loc = n_experts // tp
+    ge = _scatter_gates(gates, top_idx, n_experts)          # [t, E]
+    x_full = managed.managed_all_gather(x2, "model", mode=ctx.mdmp_mode)
+    ge_full = managed.managed_all_gather(ge.astype(x2.dtype), "model",
+                                         mode=ctx.mdmp_mode)
+    u = jnp.einsum("td,edf->etf", x_full, w1)
+    if layers.gated(cfg.mlp):
+        g = jnp.einsum("td,edf->etf", x_full, w1g)
+        act = layers.activation(cfg.mlp, u, g)
+    else:
+        act = layers.activation(cfg.mlp, u, None)
+    o = jnp.einsum("etf,efd->etd", act, w2)                 # [E_loc, T, D]
+    eidx = lax.axis_index("model") * e_loc
+    g_loc = lax.dynamic_slice_in_dim(ge_full, eidx, e_loc, axis=1)
+    y_part = jnp.einsum("etd,te->td", o, g_loc.astype(o.dtype))
+    return managed.managed_reduce_scatter(y_part, "model",
+                                          mode=ctx.mdmp_mode)
+
+
+def moe_block_ep(x: Array, params: dict, cfg: ModelConfig, ctx: MeshCtx
+                 ) -> tuple[Array, Array]:
+    """x: [B, S_loc, D] -> (y, aux_loss).  Experts sharded by id over
+    'model'; tokens routed across the axis under the managed dispatch
+    schedule (bulk a2a / chunked-stream / dense fallback)."""
+    e_cfg = cfg.moe
+    b, s_loc, d = x.shape
+    t = b * s_loc
+    tp = ctx.tp
+    e = e_cfg.n_experts
+    schedule, g, cf = _resolve_dispatch(cfg, ctx, t, tp, "ep_a2a")
+    cap = capacity_for(t, e_cfg, cf)
+
+    x2 = x.reshape(t, d)
+    gates, top_idx, aux = _router(x2, params["w_router"], e, e_cfg.top_k)
+    w1, w1g, w2 = _gathered_ffn_weights(params, cfg, ctx)
+
+    if schedule == "dense":
+        # capacity-free on ANY axis size (tp=1 included): the dense
+        # contract is "never drops a token", which the capacity path
+        # below cannot honor at starved capacity factors
+        y2 = _dense_fallback_ep(x2, gates, top_idx, w1, w1g, w2, cfg, ctx,
+                                e)
+        return y2.reshape(b, s_loc, d).astype(x.dtype), aux
+
+    dest, tok, keep, order = dispatch_indices(top_idx, e, cap)
+    buffers = gather_to_buffers(x2, dest, tok, keep, e, cap)
+    counts = expert_counts(top_idx, e, cap)
+
+    if schedule == "stream" and tp > 1:
+        def expert_fn(blk, valid):
+            return _expert_ffn(blk, w1, w1g, w2, cfg.mlp, valid=valid)
+
+        back = managed.managed_expert_stream(buffers, counts, "model",
+                                             expert_fn, g=g)
+    else:
+        # tokens cross the EP axis: [E, C, D] -> [E_loc, tp*C, D]; the
+        # per-expert kept counts ride along so the grouped GEMM can skip
+        # the padded capacity rows on the receiving side
+        recv = managed.managed_all_to_all(
+            buffers, "model", split_axis=0, concat_axis=1,
+            mode=ctx.mdmp_mode)
+        cnt_recv = (lax.all_to_all(counts, "model", 0, 0, tiled=True)
+                    if tp > 1 else counts)
+        e_loc = e // tp
+        hg = recv.reshape(e_loc, tp, cap, d).reshape(e_loc * tp, cap, d)
+        vg = cnt_recv.reshape(tp, e_loc).T.reshape(e_loc * tp)
+        out_g = _expert_ffn(hg, w1, w1g, w2, cfg.mlp, valid=vg)
+        out = out_g.reshape(e_loc, tp * cap, d)
+        # route results back and combine with gate weights
+        back = managed.managed_all_to_all(
+            out, "model", split_axis=1, concat_axis=0, mode=ctx.mdmp_mode)
     y2 = combine_from_buffers(back, dest, tok, keep, gates, order, t)
     return y2.reshape(b, s_loc, d).astype(x.dtype), aux
 
@@ -164,39 +224,50 @@ def moe_block_expert_tp(x: Array, params: dict, cfg: ModelConfig,
     """x: [B, S_loc, D] -> (y, aux_loss).  All ranks hold an ff-shard of
     every expert; dispatch happens on the sequence-gathered activations so
     all ranks agree on token order, and the down-projection reduce-scatters
-    straight back to sequence shards (MDMP ring)."""
+    straight back to sequence shards (MDMP ring).  The dispatch knob maps
+    onto this layout's actual wire: "stream" rides the sequence AG/RS as
+    chunked rings, "dense" skips the capacity buffers entirely (every
+    expert's ff-shard on every token, gate-masked — capacity-free)."""
     e_cfg = cfg.moe
     b, s_loc, d = x.shape
+    schedule, g, cf = _resolve_dispatch(cfg, ctx, b * s_loc, ctx.tp,
+                                        "expert_tp")
+    seq_mode = "interleaved" if schedule == "stream" else ctx.mdmp_mode
+    seq_chunks = g if schedule == "stream" else None
 
     # gather the sequence (all ranks see identical tokens)
     x_full2 = managed.managed_all_gather(layers.to_ring(x), "model",
-                                         mode=ctx.mdmp_mode)  # [S*B, D]
+                                         mode=seq_mode, chunks=seq_chunks)
     t = x_full2.shape[0]
     e = e_cfg.n_experts
-    cap = max(1, int(t * e_cfg.top_k / e * e_cfg.capacity_factor))
+    cap = capacity_for(t, e_cfg, cf)
 
     gates, top_idx, aux = _router(x_full2, params["w_router"], e,
                                   e_cfg.top_k)
-    dest, tok, keep, order = dispatch_indices(top_idx, e, cap)
-    buffers = gather_to_buffers(x_full2, dest, tok, keep, e, cap)
+    w1, w1g, w2 = _gathered_ffn_weights(params, cfg, ctx)
 
-    w1 = fsdp_gather(params["w1"], "data", axis=1, mode=ctx.mdmp_mode)
-    w1g = (fsdp_gather(params["w1_gate"], "data", axis=1,
-                       mode=ctx.mdmp_mode)
-           if layers.gated(cfg.mlp) else None)
-    w2 = fsdp_gather(params["w2"], "data", axis=2, mode=ctx.mdmp_mode)
-    u = jnp.einsum("ecd,edf->ecf", buffers, w1)          # F_loc columns
-    if layers.gated(cfg.mlp):
-        g = jnp.einsum("ecd,edf->ecf", buffers, w1g)
-        act = layers.activation(cfg.mlp, u, g)
+    if schedule == "dense":
+        ge = _scatter_gates(gates, top_idx, e)               # [T, E]
+        u = jnp.einsum("td,edf->etf", x_full2, w1)           # F_loc cols
+        if layers.gated(cfg.mlp):
+            gg = jnp.einsum("td,edf->etf", x_full2, w1g)
+            act = layers.activation(cfg.mlp, u, gg)
+        else:
+            act = layers.activation(cfg.mlp, u, None)
+        part = jnp.einsum("etf,efd->etd", act, w2)           # partial (F)
+        y_part = jnp.einsum("etd,te->td", part, ge.astype(part.dtype))
     else:
-        act = layers.activation(cfg.mlp, u, None)
-    part = jnp.einsum("ecf,efd->ecd", act, w2)           # partial over F
+        dest, tok, keep, order = dispatch_indices(top_idx, e, cap)
+        buffers = gather_to_buffers(x_full2, dest, tok, keep, e, cap)
+        counts = expert_counts(top_idx, e, cap)
+        part = _expert_ffn(buffers, w1, w1g, w2, cfg.mlp, valid=counts)
+        y_part = combine_from_buffers(part, dest, tok, keep, gates, order,
+                                      t)
 
     # combine back to token-major, then one ring both sums the ff-partials
     # and scatters the sequence (psum+scatter ring).
-    y_part = combine_from_buffers(part, dest, tok, keep, gates, order, t)
-    y2 = managed.managed_reduce_scatter(y_part, "model", mode=ctx.mdmp_mode)
+    y2 = managed.managed_reduce_scatter(y_part, "model", mode=seq_mode,
+                                        chunks=seq_chunks)
     return layers.from_ring(y2, b).astype(x.dtype), aux
 
 

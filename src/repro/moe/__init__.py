@@ -1,0 +1,18 @@
+"""Managed expert-parallel dispatch — the fifth managed subsystem.
+
+MoE token routing is the most data-dependent communication in the
+codebase: how many bytes cross the EP axis per layer is decided by a
+router at runtime.  This package owns the dispatch bookkeeping (capacity
+math, index-based gather/combine, per-expert valid counts) shared by the
+model blocks (models/moe.py), the streamed executor
+(core/managed.py::managed_expert_stream), the grouped-expert GEMM
+(kernels/grouped_matmul.py) and the decision machinery
+(core/cost_model.py::decide_moe_dispatch).
+"""
+
+from repro.moe.dispatch import (capacity_for, combine_from_buffers,
+                                dispatch_indices, expert_counts,
+                                gather_to_buffers)
+
+__all__ = ["capacity_for", "combine_from_buffers", "dispatch_indices",
+           "expert_counts", "gather_to_buffers"]

@@ -1,0 +1,100 @@
+"""Capacity-limited token dispatch bookkeeping (index-based, GShard
+semantics) — shared by every MoE dispatch schedule.
+
+The one-hot [T, E, C] dispatch tensor would be terabytes at 32k-token
+microbatches, so dispatch is a stable expert-major argsort: entry (t, k)
+lands at slot ``pos`` within expert e's capacity block iff fewer than C
+earlier entries routed to e (``keep``); overflow entries park in a
+sentinel row that contributes exactly zero on combine.
+
+``capacity_for`` is the ONE place capacity is computed (PR 5 satellite):
+the seed code floored ``int(t * top_k / e * capacity_factor)`` in two
+blocks, so ``capacity_factor=1.0`` with perfectly balanced routing could
+still drop tokens — this rounds UP.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_model import moe_capacity
+
+Array = jax.Array
+
+
+def capacity_for(tokens: int, e_cfg, capacity_factor: float | None = None
+                 ) -> int:
+    """Per-expert capacity C for ``tokens`` routed top-k among
+    ``e_cfg.n_experts`` experts.  Rounds UP so a capacity factor of 1.0
+    never drops under perfectly balanced routing (the seed's ``int(...)``
+    floored).  ``capacity_factor`` overrides the config's static guess —
+    the managed decision layer re-picks it from instrumented routing.
+    Delegates to ``cost_model.moe_capacity`` so the planner/tuner price
+    exactly the C the blocks execute."""
+    cf = e_cfg.capacity_factor if capacity_factor is None else capacity_factor
+    return moe_capacity(tokens, e_cfg.top_k, e_cfg.n_experts, cf)
+
+
+def dispatch_indices(top_idx: Array, n_experts: int, capacity: int
+                     ) -> tuple[Array, Array, Array, Array]:
+    """Capacity-limited dispatch bookkeeping (index-based).
+
+    top_idx: [T, K] expert ids.  Returns
+      dest  [T*K] slot in the [E*C] buffer (or E*C for dropped entries),
+      tok   [T*K] source token of each (t, k) entry in expert-sorted order,
+      keep  [T*K] 1.0 where the entry fit under capacity,
+      order [T*K] the expert-major argsort permuting flat (t, k) entries
+            into the order of the three arrays above (combine_from_buffers
+            uses it to align the gate weights).
+    """
+    t, k = top_idx.shape
+    flat_e = top_idx.reshape(t * k)
+    order = jnp.argsort(flat_e, stable=True)            # expert-major order
+    sorted_e = flat_e[order]
+    tok = order // k
+    # position of each entry within its expert's buffer
+    pos = jnp.arange(t * k) - jnp.searchsorted(sorted_e,
+                                               sorted_e, side="left")
+    keep = (pos < capacity).astype(jnp.float32)
+    dest = jnp.where(pos < capacity, sorted_e * capacity + pos,
+                     n_experts * capacity)               # overflow bucket
+    return dest, tok, keep, order
+
+
+def expert_counts(top_idx: Array, n_experts: int, capacity: int) -> Array:
+    """Per-expert KEPT row counts [E] int32 (``min(load_e, C)``) — the
+    scalar-prefetched valid counts the grouped-expert GEMM uses to skip
+    padded capacity rows.  Consistent with ``dispatch_indices``: rows
+    [0, count_e) of expert e's capacity block hold real tokens, the rest
+    are zero padding."""
+    flat = jnp.sort(top_idx.reshape(-1))
+    eids = jnp.arange(n_experts)
+    load = (jnp.searchsorted(flat, eids, side="right")
+            - jnp.searchsorted(flat, eids, side="left"))
+    return jnp.minimum(load, capacity).astype(jnp.int32)
+
+
+def gather_to_buffers(x2: Array, dest: Array, tok: Array, keep: Array,
+                      n_experts: int, capacity: int) -> Array:
+    """x2: [T, D] -> expert buffers [E, C, D] (dropped tokens zeroed)."""
+    d = x2.shape[-1]
+    rows = x2[tok] * keep[:, None].astype(x2.dtype)
+    buf = jnp.zeros((n_experts * capacity + 1, d), x2.dtype)
+    buf = buf.at[dest].set(rows, mode="drop")
+    return buf[:-1].reshape(n_experts, capacity, d)
+
+
+def combine_from_buffers(out: Array, dest: Array, tok: Array, keep: Array,
+                         gates: Array, order: Array, t: int) -> Array:
+    """out: [E, C, D] -> y [T, D], weighting by the (t, k) gate.
+    dest/tok/keep are in expert-sorted order; ``order`` permutes the flat
+    [T*K] gate entries into that order."""
+    e, c, d = out.shape
+    flat = jnp.concatenate([out.reshape(e * c, d),
+                            jnp.zeros((1, d), out.dtype)])
+    k = gates.shape[1]
+    g = gates.reshape(t * k)[order]
+    rows = flat[dest] * (g * keep)[:, None].astype(out.dtype)
+    y = jnp.zeros((t, d), out.dtype)
+    return y.at[tok].add(rows)

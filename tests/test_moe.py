@@ -1,0 +1,449 @@
+"""Managed MoE dispatch validation (tier-1, single device).
+
+Four layers of oracles:
+  * dispatch bookkeeping — capacity round-up (the seed's floor dropped
+    tokens at capacity_factor=1.0 balanced), and the gather/combine
+    round-trip == gate-weighted identity on kept tokens with exactly
+    zero contribution from dropped ones (numpy oracle + hypothesis
+    property over arbitrary (t, E, top_k, capacity));
+  * kernel — grouped-expert GEMM Pallas (interpret) == jnp masked
+    einsum bit-exact, including padded capacity rows holding garbage,
+    with matching gradients through the custom VJP;
+  * model — the three dispatch schedules (bulk / stream / dense) agree
+    on a degenerate axis for both layouts (multi-rank equivalence lives
+    in tests/dist_suite/test_moe.py);
+  * the managed decision — cost model, resolver trail, tuner seed /
+    measured override / persistence, CommRegion declaration, and the
+    instrumented routing statistics that re-resolve the capacity factor.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core import cost_model as cm
+from repro.core import instrument, managed
+from repro.kernels import grouped_matmul as gm
+from repro.models import moe
+from repro.moe.dispatch import (capacity_for, combine_from_buffers,
+                                dispatch_indices, expert_counts,
+                                gather_to_buffers)
+from repro.parallel.sharding import MeshCtx, smap
+
+
+# ---------------------------------------------------------------------------
+# Dispatch bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_for_rounds_up():
+    """ceil, not floor: t=10, K=1, E=4, cf=1.0 -> C=3; the seed's
+    int(10 * 1 / 4 * 1.0) = 2 dropped tokens under balanced routing."""
+    e_cfg = MoEConfig(n_experts=4, top_k=1, d_ff_expert=8,
+                      capacity_factor=1.0)
+    assert capacity_for(10, e_cfg) == 3
+    assert int(10 * 1 / 4 * 1.0) == 2          # what the seed computed
+    # balanced-ish routing with max load 3 fits: nothing drops
+    top = jnp.asarray(np.array([[0], [1], [2], [3], [0], [1], [2], [3],
+                                [0], [1]], np.int32))
+    _, _, keep, _ = dispatch_indices(top, 4, capacity_for(10, e_cfg))
+    np.testing.assert_array_equal(np.asarray(keep), 1.0)
+    # override: the managed decision's re-picked cf flows through
+    assert capacity_for(10, e_cfg, 2.0) == 5
+
+
+def _roundtrip_oracle(x, gates, top_idx, n_experts, capacity):
+    """Independent numpy oracle of the GShard capacity semantics: entry
+    (t, k) is kept iff fewer than C earlier entries (stable expert-major
+    order) routed to its expert; y[t] = sum_kept gate * x[t]."""
+    t, k = top_idx.shape
+    flat_e = top_idx.reshape(-1)
+    order = np.argsort(flat_e, kind="stable")
+    fill = np.zeros(n_experts, np.int64)
+    y = np.zeros_like(x)
+    kept_mask = np.zeros(t * k, bool)
+    for pos in order:
+        e = flat_e[pos]
+        if fill[e] < capacity:
+            fill[e] += 1
+            kept_mask[pos] = True
+            y[pos // k] += gates.reshape(-1)[pos] * x[pos // k]
+    return y, kept_mask
+
+
+def _check_roundtrip(x, gates, top_idx, n_experts, capacity):
+    dest, tok, keep, order = dispatch_indices(
+        jnp.asarray(top_idx), n_experts, capacity)
+    buffers = gather_to_buffers(jnp.asarray(x), dest, tok, keep,
+                                n_experts, capacity)
+    y = combine_from_buffers(buffers, dest, tok, keep, jnp.asarray(gates),
+                             order, x.shape[0])
+    want, kept_mask = _roundtrip_oracle(x, gates, top_idx, n_experts,
+                                        capacity)
+    np.testing.assert_allclose(np.asarray(y), want, rtol=1e-5, atol=1e-6)
+    # keep flags agree with the oracle's capacity semantics
+    # (dispatch_indices' keep is in expert-sorted order; map it back)
+    inv = np.empty_like(np.asarray(order))
+    inv[np.asarray(order)] = np.arange(len(inv))
+    np.testing.assert_array_equal(np.asarray(keep)[inv].astype(bool),
+                                  kept_mask)
+    # counts consistent with keep
+    counts = expert_counts(jnp.asarray(top_idx), n_experts, capacity)
+    assert int(np.sum(np.asarray(counts))) == int(kept_mask.sum())
+
+
+@pytest.mark.parametrize("seed,t,e,k,cap", [
+    (0, 16, 4, 2, 3),      # overflow everywhere
+    (1, 8, 8, 1, 1),       # tight capacity
+    (2, 32, 4, 4, 40),     # capacity exceeds load: nothing drops
+    (3, 5, 3, 2, 2),
+])
+def test_dispatch_roundtrip_cases(seed, t, e, k, cap):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(t, 6)).astype(np.float32)
+    gates = rng.uniform(0.1, 1.0, size=(t, k)).astype(np.float32)
+    top_idx = rng.integers(0, e, size=(t, k)).astype(np.int32)
+    _check_roundtrip(x, gates, top_idx, e, cap)
+
+
+def test_dispatch_roundtrip_property():
+    """Hypothesis property: gather_to_buffers ∘ combine_from_buffers ==
+    gate-weighted identity on kept tokens and exactly zero contribution
+    from dropped tokens, for arbitrary (t, E, top_k, capacity) including
+    capacity-overflow cases."""
+    hyp = pytest.importorskip("hypothesis")
+    hnp = pytest.importorskip("hypothesis.extra.numpy")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(deadline=None, max_examples=50)
+    @hyp.given(st.data(), st.integers(1, 24), st.integers(1, 8),
+               st.integers(1, 4), st.integers(1, 9))
+    def run(data, t, e, k, cap):
+        k = min(k, e)
+        x = data.draw(hnp.arrays(np.float32, (t, 4),
+                                 elements=st.floats(-4, 4, width=32)))
+        gates = data.draw(hnp.arrays(np.float32, (t, k),
+                                     elements=st.floats(0, 1, width=32)))
+        top_idx = data.draw(hnp.arrays(np.int32, (t, k),
+                                       elements=st.integers(0, e - 1)))
+        _check_roundtrip(x, gates, top_idx, e, cap)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# Grouped-expert GEMM kernel
+# ---------------------------------------------------------------------------
+
+
+def _gemm_operands(seed, G, C, D, F, E, garbage=True):
+    rng = np.random.default_rng(seed)
+    h = rng.normal(size=(G, C, D)).astype(np.float32)
+    valid = rng.integers(0, C + 1, size=G).astype(np.int32)
+    valid[0] = 0
+    valid[-1] = C
+    if garbage:
+        # rows past the valid count may hold ANYTHING (the engines mask)
+        rows = np.arange(C)
+        h = np.where(rows[None, :, None] < valid[:, None, None], h,
+                     1e3 * rng.normal(size=h.shape)).astype(np.float32)
+    w1 = rng.normal(size=(E, D, F)).astype(np.float32) * 0.1
+    w1g = rng.normal(size=(E, D, F)).astype(np.float32) * 0.1
+    w2 = rng.normal(size=(E, F, D)).astype(np.float32) * 0.1
+    return (jnp.asarray(h), jnp.asarray(w1), jnp.asarray(w1g),
+            jnp.asarray(w2), jnp.asarray(valid))
+
+
+@pytest.mark.parametrize("mlp", ["swiglu", "relu2"])
+@pytest.mark.parametrize("G,C,D,F,E", [
+    (4, 16, 8, 12, 4),       # one group per expert
+    (8, 32, 8, 16, 2),       # (expert, src-rank) grouping: gpe=4
+    (3, 256, 8, 8, 3),       # multi-block capacity walk (blk_c=128)
+])
+def test_grouped_gemm_engines_bit_exact(mlp, G, C, D, F, E):
+    h, w1, w1g, w2, valid = _gemm_operands(G * 7 + C, G, C, D, F, E)
+    w1g_in = w1g if gm.gated(mlp) else None
+    o_jnp = gm.grouped_expert_ffn(h, w1, w1g_in, w2, valid, mlp=mlp,
+                                  engine="jnp")
+    o_pal = gm.grouped_expert_ffn(h, w1, w1g_in, w2, valid, mlp=mlp,
+                                  engine="pallas")
+    np.testing.assert_array_equal(np.asarray(o_jnp), np.asarray(o_pal))
+    # padded capacity rows are EXACT zeros in both engines
+    rows = np.arange(C)
+    pad = rows[None, :, None] >= np.asarray(valid)[:, None, None]
+    np.testing.assert_array_equal(np.asarray(o_jnp)[np.broadcast_to(
+        pad, o_jnp.shape)], 0.0)
+
+
+def test_grouped_gemm_matches_plain_ffn_when_full():
+    """valid == C on zero-padded-free buffers reduces to the plain dense
+    expert FFN einsum."""
+    G, C, D, F = 4, 8, 6, 10
+    h, w1, w1g, w2, _ = _gemm_operands(3, G, C, D, F, G, garbage=False)
+    valid = jnp.full((G,), C, jnp.int32)
+    got = gm.grouped_expert_ffn(h, w1, w1g, w2, valid, mlp="swiglu",
+                                engine="jnp")
+    u = jnp.einsum("ecd,edf->ecf", h, w1)
+    g = jnp.einsum("ecd,edf->ecf", h, w1g)
+    want = jnp.einsum("ecf,efd->ecd", jax.nn.silu(u) * g, w2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-6, atol=2e-6)
+
+
+@pytest.mark.parametrize("engine", ["jnp", "pallas"])
+def test_grouped_gemm_grads(engine):
+    """Gradients flow through both engines (the Pallas path's custom VJP
+    recomputes through the jnp engine) and match the masked reference."""
+    G, C, D, F, E = 4, 16, 8, 12, 4
+    h, w1, w1g, w2, valid = _gemm_operands(11, G, C, D, F, E)
+
+    def loss(hh, a, b, c):
+        return jnp.sum(gm.grouped_expert_ffn(hh, a, b, c, valid,
+                                             mlp="swiglu",
+                                             engine=engine) ** 2)
+
+    grads = jax.grad(loss, argnums=(0, 1, 2, 3))(h, w1, w1g, w2)
+
+    def ref_loss(hh, a, b, c):
+        rows = jnp.arange(C)
+        hm = jnp.where(rows[None, :, None] < valid[:, None, None], hh, 0.0)
+        u = jnp.einsum("ecd,edf->ecf", hm, a,
+                       preferred_element_type=jnp.float32)
+        g = jnp.einsum("ecd,edf->ecf", hm, b,
+                       preferred_element_type=jnp.float32)
+        out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(u) * g, c,
+                         preferred_element_type=jnp.float32)
+        return jnp.sum(out ** 2)
+
+    want = jax.grad(ref_loss, argnums=(0, 1, 2, 3))(h, w1, w1g, w2)
+    for g_, w_, nm in zip(grads, want, "h123"):
+        np.testing.assert_allclose(np.asarray(g_), np.asarray(w_),
+                                   rtol=2e-5, atol=2e-5,
+                                   err_msg=f"d{nm} ({engine})")
+
+
+# ---------------------------------------------------------------------------
+# Model blocks: the three schedules agree (degenerate axis; 8-rank
+# equivalence lives in tests/dist_suite/test_moe.py)
+# ---------------------------------------------------------------------------
+
+
+def _block_cfg(impl, disp, g=0, cf=8.0):
+    return ModelConfig(
+        name="t", family="moe", n_layers=1, d_model=16, n_heads=2,
+        n_kv_heads=2, d_ff=0, vocab_size=64, tp_multiple=1,
+        dtype="float32",
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=32,
+                      capacity_factor=cf, impl=impl, dispatch=disp,
+                      dispatch_g=g))
+
+
+@pytest.fixture(scope="module")
+def block_inputs():
+    rng = np.random.default_rng(0)
+    E, D, F = 4, 16, 32
+    x = jnp.asarray(rng.normal(size=(2, 8, D)).astype(np.float32))
+    params = {
+        "w_router": jnp.asarray(rng.normal(size=(D, E))
+                                .astype(np.float32)),
+        "w1": jnp.asarray(rng.normal(size=(E, D, F)).astype(np.float32)
+                          * 0.1),
+        "w1_gate": jnp.asarray(rng.normal(size=(E, D, F))
+                               .astype(np.float32) * 0.1),
+        "w2": jnp.asarray(rng.normal(size=(E, F, D)).astype(np.float32)
+                          * 0.1),
+    }
+    return x, params
+
+
+@pytest.mark.parametrize("impl", ["ep_a2a", "expert_tp"])
+def test_block_schedules_agree(impl, block_inputs):
+    x, params = block_inputs
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ctx = MeshCtx.from_mesh(mesh, mdmp_mode="bulk")
+    fn = (moe.moe_block_ep if impl == "ep_a2a"
+          else moe.moe_block_expert_tp)
+    outs = {}
+    for disp in ("bulk", "stream", "dense", "auto"):
+        cfg = _block_cfg(impl, disp)
+        run = jax.jit(smap(
+            lambda xx, pp, cfg=cfg: fn(xx, pp, cfg, ctx)[0], mesh,
+            in_specs=(P(None, "model", None), P()),
+            out_specs=P(None, "model", None)))
+        outs[disp] = np.asarray(run(x, params))
+    for disp in ("stream", "dense", "auto"):
+        np.testing.assert_allclose(outs[disp], outs["bulk"], rtol=1e-5,
+                                   atol=1e-6, err_msg=f"{impl} {disp}")
+
+
+def test_dense_is_capacity_free_on_degenerate_axis(block_inputs):
+    """schedule='dense' honors the never-drops contract even at tp=1: at
+    a starved capacity factor the capacity path drops tokens, the dense
+    path matches the unlimited-capacity reference exactly."""
+    x, params = block_inputs
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ctx = MeshCtx.from_mesh(mesh, mdmp_mode="bulk")
+
+    def run(disp, cf):
+        cfg = _block_cfg("ep_a2a", disp, cf=cf)
+        fn = jax.jit(smap(
+            lambda xx, pp, cfg=cfg: moe.moe_block_ep(xx, pp, cfg, ctx)[0],
+            mesh, in_specs=(P(None, "model", None), P()),
+            out_specs=P(None, "model", None)))
+        return np.asarray(fn(x, params))
+
+    unlimited = run("bulk", 64.0)            # capacity covers everything
+    dense = run("dense", 0.25)               # starved cf: dense ignores it
+    starved = run("bulk", 0.25)              # ... the capacity path drops
+    np.testing.assert_allclose(dense, unlimited, rtol=1e-5, atol=1e-6)
+    assert np.abs(starved - unlimited).max() > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# The managed decision + instrumentation units
+# ---------------------------------------------------------------------------
+
+
+def test_decide_moe_dispatch_model():
+    # production point (moonshot over EP16, v5e): the stream hides the
+    # capacity-buffer wire under the grouped-GEMM compute
+    d = cm.decide_moe_dispatch(8192, 2048, 64, 6, 1408, 16, mults=3,
+                               dtype_bytes=2, capacity_factor=1.25)
+    assert d.schedule == "stream" and d.predicted_speedup > 1.0
+    assert f"{d.schedule}:{d.g}" in d.times_s
+    # over-provisioned capacity balloons the a2a bytes AND the padded
+    # rows: the capacity-free dense fallback crosses over
+    dd = cm.decide_moe_dispatch(1024, 256, 8, 2, 128, 8, dtype_bytes=4,
+                                capacity_factor=8.0)
+    assert dd.times_s["dense:1"] < dd.times_s["bulk:1"]
+    # degenerate axis: nothing crosses a link, bulk capacity path wins
+    d1 = cm.decide_moe_dispatch(1024, 256, 8, 2, 128, 1)
+    assert d1.schedule == "bulk"
+    # pinning
+    df = cm.decide_moe_dispatch(1024, 256, 8, 2, 128, 8,
+                                force_schedule="stream", force_g=4)
+    assert (df.schedule, df.g) == ("stream", 4)
+    df2 = cm.decide_moe_dispatch(1024, 256, 8, 2, 128, 8,
+                                 force_schedule="dense", force_g=4)
+    assert (df2.schedule, df2.g) == ("dense", 1)
+
+
+def test_decide_moe_dispatch_capacity_adaptation():
+    # no measurement: the declared static guess stands
+    d0 = cm.decide_moe_dispatch(1024, 256, 8, 2, 128, 8,
+                                capacity_factor=1.25)
+    assert d0.capacity_factor == 1.25 and d0.drop_frac == 0.0
+    # skewed routing measured: cf grows to the smallest covering
+    # candidate (drop-free) — and the capacity ceil matches
+    du = cm.decide_moe_dispatch(1024, 256, 8, 2, 128, 8,
+                                capacity_factor=1.25,
+                                measured_imbalance=3.2)
+    assert du.capacity_factor == 4.0 and du.drop_frac == 0.0
+    assert du.capacity == cm.moe_capacity(1024, 2, 8, 4.0)
+    # uniform routing measured: the over-provisioned guess SHRINKS
+    dd = cm.decide_moe_dispatch(1024, 256, 8, 2, 128, 8,
+                                capacity_factor=8.0,
+                                measured_imbalance=1.1)
+    assert dd.capacity_factor < 8.0
+    # imbalance beyond every candidate: the capacity path reports a
+    # residual drop — and the free choice escapes to the capacity-FREE
+    # dense fallback, which never drops
+    dr = cm.decide_moe_dispatch(1024, 256, 8, 2, 128, 8,
+                                capacity_factor=1.0,
+                                measured_imbalance=100.0,
+                                force_schedule="bulk")
+    assert dr.drop_frac > 0.0
+    dfree = cm.decide_moe_dispatch(1024, 256, 8, 2, 128, 8,
+                                   capacity_factor=1.0,
+                                   measured_imbalance=100.0)
+    assert dfree.schedule == "dense" and dfree.drop_frac == 0.0
+    # a bare measured drop rate escalates past the declared cf
+    de = cm.decide_moe_dispatch(1024, 256, 8, 2, 128, 8,
+                                capacity_factor=1.25,
+                                measured_drop_rate=0.1)
+    assert de.capacity_factor > 1.25
+
+
+def test_resolve_moe_dispatch_trail():
+    managed.clear_decision_log()
+    d = managed.resolve_moe_dispatch("model", 8, 1024, 256, 8, 2, 128,
+                                     capacity_factor=1.25)
+    rec = managed.decision_log()[-1]
+    assert rec.op == "moe_dispatch"
+    assert rec.mode == d.schedule and rec.chunks == d.g
+    assert rec.nbytes == d.a2a_bytes
+    # ambient bulk mode pins the unmanaged baseline
+    with managed.use_config(managed.MDMPConfig(mode="bulk")):
+        db = managed.resolve_moe_dispatch("model", 8, 1024, 256, 8, 2,
+                                          128)
+    assert db.schedule == "bulk"
+    # ambient interleaved mode pins the always-stream schedule
+    with managed.use_config(managed.MDMPConfig(mode="interleaved")):
+        di = managed.resolve_moe_dispatch("model", 8, 1024, 256, 8, 2,
+                                          128)
+    assert di.schedule == "stream"
+    # an EXPLICIT schedule wins over the ambient mode (cfg.moe.dispatch
+    # precedence, same contract as the pipeline knob)
+    with managed.use_config(managed.MDMPConfig(mode="interleaved")):
+        dx = managed.resolve_moe_dispatch("model", 8, 1024, 256, 8, 2,
+                                          128, schedule="dense")
+    assert dx.schedule == "dense"
+
+
+def test_tuner_moe(tmp_path):
+    from repro.core.tuner import ScheduleTuner
+    path = str(tmp_path / "tuner.json")
+    t = ScheduleTuner(path=path)
+    e = t.decide_moe("model", 8, 1024, 256, 8, 2, 128,
+                     dtype_str="float32", dtype_bytes=4)
+    assert e.mode in ("bulk", "stream", "dense")
+    assert t.next_trial(e.key) == ScheduleTuner.MOE_CANDIDATES[0]
+    # measured override: dense wins
+    t.record(e.key, "bulk", 1, 5e-3)
+    t.record(e.key, "stream", 2, 6e-3)
+    t.record(e.key, "dense", 1, 2e-3)
+    assert (t.entries[e.key].mode, t.entries[e.key].chunks) == ("dense", 1)
+    t.save()
+    t2 = ScheduleTuner(path=path)
+    assert t2.entries[e.key].mode == "dense"
+
+
+def test_comm_region_moe_declaration():
+    from repro.core.region import CommRegion
+    region = CommRegion("moe", axis_sizes={"model": 8})
+    region.moe("dispatch", axis="model", tokens_local=1024, d_model=256,
+               n_experts=8, top_k=2, d_ff_expert=128, dtype=jnp.bfloat16,
+               capacity_factor=1.25)
+    plan = region.plan(lambda x: x + 1, np.zeros(4, np.float32))
+    assert plan.schedule_for("dispatch") in ("bulk", "stream", "dense")
+    assert plan.chunks_for("dispatch") >= 1
+    cap = cm.moe_capacity(1024, 2, 8, 1.25)
+    assert plan.entries["dispatch"].spec.nbytes == 8 * cap * 256 * 2
+
+
+def test_routing_stats_exact():
+    # 4 tokens top-2 over 4 experts, capacity 2:
+    # loads = [4, 2, 1, 1]; kept = [2, 2, 1, 1] -> drop 2/8, occ 6/8
+    top = np.array([[0, 1], [0, 1], [0, 2], [0, 3]], np.int32)
+    stats = instrument.moe_routing_stats(jnp.asarray(top), 4, 2)
+    np.testing.assert_array_equal(np.asarray(stats["histogram"]),
+                                  [4.0, 2.0, 1.0, 1.0])
+    assert np.isclose(float(stats["drop_rate"]), 0.25)
+    assert np.isclose(float(stats["occupancy"]), 0.75)
+    assert np.isclose(float(stats["imbalance"]), 2.0)
+    instrument.clear_routing_log()
+    rec = instrument.capture_routing("layer0", top, 4, 2)
+    assert instrument.routing_log() == [rec]
+    assert rec.drop_rate == 0.25 and rec.tokens == 4 and rec.top_k == 2
+    # the instrumented record drives the managed capacity re-resolution
+    d = managed.resolve_moe_dispatch(
+        "model", 8, 1024, 256, 8, 2, 128, capacity_factor=1.0,
+        measured_imbalance=rec.imbalance,
+        measured_drop_rate=rec.drop_rate)
+    assert d.capacity_factor >= rec.imbalance
+    instrument.clear_routing_log()

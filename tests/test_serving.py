@@ -122,10 +122,12 @@ def _build(arch):
 
 
 @pytest.mark.parametrize("arch", ["granite-34b", "mamba2-130m",
-                                  "hymba-1-5b"])
+                                  "hymba-1-5b", "moonshot-v1-16b-a3b"])
 def test_paged_generator_matches_contiguous(arch):
     """Generator(engine='paged') greedy-decodes the SAME tokens as the
-    contiguous-cache oracle (dense / ssm / hybrid-with-SWA families)."""
+    contiguous-cache oracle (dense / ssm / hybrid-with-SWA / moe
+    families — moe_block_decode behind the serving engine had no
+    coverage before PR 5)."""
     cfg, mesh, model, params = _build(arch)
     shape = ShapeConfig("serve", seq_len=32, global_batch=2, kind="decode")
     rng = np.random.default_rng(0)
