@@ -44,6 +44,21 @@ echo "$moe_out" | grep -q "decision moe_dispatch(" || {
 echo "$moe_out" | grep -q "loss" || {
     echo "FAIL: moe smoke produced no training losses"; exit 1; }
 
+echo "== fault smoke (managed cadence + deterministic fault injection) =="
+rm -rf /tmp/mdmp_ci_fault_ckpt
+fault_out="$(python -m repro.launch.train --arch granite-34b --reduced \
+    --steps 8 --batch 4 --seq 32 --ckpt-every auto --mtbf 2 \
+    --fault-plan 'transient@4;slow@6:0.2' \
+    --ckpt /tmp/mdmp_ci_fault_ckpt)"
+echo "$fault_out" | tail -6
+echo "$fault_out" | grep -q "decision ckpt_interval(" || {
+    echo "FAIL: fault smoke missing the ckpt_interval decision"; exit 1; }
+echo "$fault_out" | grep -q "faults injected=2 unfired=0 restarts=1" || {
+    echo "FAIL: fault smoke did not inject+recover the planned faults"
+    exit 1; }
+echo "$fault_out" | grep -q "done at step 8" || {
+    echo "FAIL: fault smoke did not run to completion"; exit 1; }
+
 echo "== benchmark smoke (python -m benchmarks.run) =="
 out="$(MDMP_BENCH_REPS="${MDMP_BENCH_REPS:-2}" python -m benchmarks.run)"
 echo "$out" | tail -40
@@ -97,6 +112,15 @@ echo "$out" | grep -q "moe_dispatch_tpu_v5e_.*_chosen" || {
     echo "FAIL: moe dispatch model rows missing"; exit 1; }
 echo "$out" | grep -q "moe_dispatch_decision_.*trail=moe_dispatch" || {
     echo "FAIL: moe dispatch decision trail entry missing"; exit 1; }
+# Fault-tolerance smoke: the goodput comparison must have run (managed
+# Young/Daly cadence vs the fixed-25 baseline under the same injected
+# fault) and the decision trail must contain the chosen interval.
+echo "$out" | grep -q "faults_goodput_fixed25," || {
+    echo "FAIL: fixed-cadence goodput row missing"; exit 1; }
+echo "$out" | grep -q "faults_goodput_managed,.*vs fixed25" || {
+    echo "FAIL: managed-cadence goodput row missing"; exit 1; }
+echo "$out" | grep -q "ckpt_decision_.*trail=ckpt_interval" || {
+    echo "FAIL: checkpoint cadence decision trail entry missing"; exit 1; }
 echo "$out" | grep -q "measured_suite,0.00,ERROR" && {
     echo "FAIL: measured suite subprocess errored"; exit 1; }
 echo "CI OK"

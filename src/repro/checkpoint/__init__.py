@@ -1,4 +1,6 @@
 from repro.checkpoint.ckpt import (CheckpointManager, latest_step, restore,
-                                   save)
+                                   restore_latest, save, valid_steps)
+from repro.checkpoint.metrics import CheckpointMetrics
 
-__all__ = ["CheckpointManager", "latest_step", "restore", "save"]
+__all__ = ["CheckpointManager", "CheckpointMetrics", "latest_step",
+           "restore", "restore_latest", "save", "valid_steps"]

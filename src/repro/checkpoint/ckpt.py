@@ -4,13 +4,23 @@ elastic restore.
 Layout:   <dir>/step_<k>/arrays.npz + manifest.json  (+ .tmp staging)
 
 Fault-tolerance contract (DESIGN.md §4):
-  * atomic: the step directory is staged as ``.tmp`` and os.rename'd into
-    place — a crash mid-save never corrupts the latest checkpoint;
+  * atomic: the step directory is staged as ``.tmp`` and os.replace'd into
+    place — a crash mid-save never corrupts the latest checkpoint, and
+    ``latest_step`` only trusts directories whose manifest + arrays both
+    landed;
   * elastic: arrays are saved UNSHARDED (gathered logical arrays), so a
     restart may resume on any mesh shape — re-sharding happens at load via
-    device_put with the new mesh's shardings;
-  * async: ``save_async`` hands the host copy to a writer thread so the
-    train loop only blocks for the device->host transfer.
+    device_put with the new mesh's shardings (and the persisted tuner
+    winners are replayed onto the new topology, tuner.replan_for_mesh);
+  * async: ``save_async`` blocks the train loop only for the ON-DEVICE
+    snapshot (an HBM-bandwidth copy, so the next step may donate the live
+    buffers); the device->host drain then runs on the writer thread in
+    chunks metered under the overlap budget (core/overlap.py::
+    drain_chunk_bytes — each chunk's D2H pull stalls the step stream at
+    most ``budget`` of one step), followed by serialisation + the atomic
+    commit.  Every save's (snapshot, drain, write) seconds and bytes land
+    in checkpoint/metrics.py — the counters the Young/Daly cadence
+    decision (cost_model.decide_checkpoint) re-resolves from.
 
 On real multi-host pods each host writes only its address-local shards and
 the manifest records the union; this single-process implementation writes
@@ -21,12 +31,22 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
+import time
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+from repro.checkpoint.metrics import CheckpointMetrics
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+#: default drain chunk (64 MiB) when no metered size is configured
+DEFAULT_DRAIN_CHUNK = 64 * 1024 * 1024
 
 
 def _flatten_with_paths(tree: Any) -> list[tuple[str, Any]]:
@@ -76,12 +96,27 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None
     return final
 
 
-def latest_step(ckpt_dir: str) -> int | None:
+def valid_steps(ckpt_dir: str) -> list[int]:
+    """Committed checkpoint steps, ascending.  A directory only counts
+    when both the manifest and the arrays landed — a crashed save's
+    leftovers (``.tmp`` staging, a partial dir) are never trusted."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_") and not d.endswith(".tmp")]
-    return max(steps) if steps else None
+        return []
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(d)
+        if not m:
+            continue
+        path = os.path.join(ckpt_dir, d)
+        if (os.path.exists(os.path.join(path, "manifest.json"))
+                and os.path.exists(os.path.join(path, "arrays.npz"))):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = valid_steps(ckpt_dir)
+    return steps[-1] if steps else None
 
 
 def restore(ckpt_dir: str, step: int, like: Any,
@@ -105,7 +140,6 @@ def restore(ckpt_dir: str, step: int, like: Any,
             f"{key}: ckpt {arr.shape} vs model {want}"
         saved_dt = dtypes.get(key, str(arr.dtype))
         if str(arr.dtype) != saved_dt:
-            import jax.numpy as jnp
             arr = np.asarray(jnp.asarray(arr).astype(saved_dt))
         leaves.append(arr)
     treedef = jax.tree_util.tree_structure(like)
@@ -116,26 +150,98 @@ def restore(ckpt_dir: str, step: int, like: Any,
     return tree, manifest["extra"]
 
 
+def restore_latest(ckpt_dir: str, like: Any, shardings: Any | None = None
+                   ) -> tuple[Any, dict, int] | None:
+    """Restore the newest readable checkpoint, falling back step by step
+    past corrupt ones (a truncated shard passes the directory check but
+    fails the load — e.g. the ``corrupt@k`` fault).  A corrupt directory
+    is quarantined (renamed ``*.corrupt``) so it is never retried and the
+    next GC removes it.  Returns (tree, extra, step) or None."""
+    for step in reversed(valid_steps(ckpt_dir)):
+        try:
+            tree, extra = restore(ckpt_dir, step, like, shardings)
+            return tree, extra, step
+        except Exception:               # noqa: BLE001 — fallback path
+            bad = os.path.join(ckpt_dir, f"step_{step:08d}")
+            try:
+                os.replace(bad, bad + ".corrupt")
+            except OSError:
+                shutil.rmtree(bad, ignore_errors=True)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Async manager: on-device snapshot -> metered drain -> atomic write
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _device_copy(tree: Any) -> Any:
+    return jax.tree.map(jnp.copy, tree)
+
+
+def _drain_leaf(x: Any, chunk_bytes: int) -> np.ndarray:
+    """Pull one leaf to host in <= ``chunk_bytes`` pieces so no single
+    D2H transfer stalls the step stream longer than the metered budget."""
+    if not isinstance(x, jax.Array):
+        return np.asarray(x)
+    nbytes = x.size * x.dtype.itemsize
+    if x.ndim == 0 or nbytes <= chunk_bytes:
+        return np.asarray(jax.device_get(x))
+    rows_per = max(1, int(chunk_bytes // max(1, nbytes // x.shape[0])))
+    parts = [np.asarray(jax.device_get(x[i:i + rows_per]))
+             for i in range(0, x.shape[0], rows_per)]
+    return np.concatenate(parts, axis=0)
+
+
 class CheckpointManager:
     """Async saves + retention.  ``wait()`` before reading a checkpoint
-    back or exiting."""
+    back or exiting.
 
-    def __init__(self, ckpt_dir: str, keep: int = 3):
+    ``save_async`` blocks only for the on-device snapshot copy (the live
+    buffers may be donated by the very next train step); the drain +
+    write ride the writer thread.  ``drain_chunk_bytes`` meters the D2H
+    chunking (core/overlap.py::drain_chunk_bytes); ``metrics`` collects
+    the per-save counters the cadence decision feeds on.
+    """
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, *,
+                 metrics: CheckpointMetrics | None = None,
+                 drain_chunk_bytes: int | None = None):
         self.ckpt_dir = ckpt_dir
         self.keep = keep
+        self.metrics = metrics or CheckpointMetrics()
+        self.drain_chunk_bytes = drain_chunk_bytes or DEFAULT_DRAIN_CHUNK
         self._thread: threading.Thread | None = None
         self._error: list[BaseException] = []
 
     def save_async(self, step: int, tree: Any,
                    extra: dict | None = None) -> None:
         self.wait()
-        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
-                                 tree)
+        t0 = time.perf_counter()
+        snapshot = _device_copy(tree)
+        # the snapshot must materialise before returning: the caller's
+        # next step donates the source buffers, and the copy is what the
+        # drain reads.  This block is the δ the loop pays up front — an
+        # HBM copy, not a PCIe round trip.
+        jax.block_until_ready(snapshot)
+        snapshot_s = time.perf_counter() - t0
+        nbytes = sum(leaf.size * leaf.dtype.itemsize
+                     for leaf in jax.tree.leaves(snapshot)
+                     if hasattr(leaf, "size"))
+        chunk = self.drain_chunk_bytes
 
         def work():
             try:
+                t1 = time.perf_counter()
+                host_tree = jax.tree.map(
+                    lambda x: _drain_leaf(x, chunk), snapshot)
+                drain_s = time.perf_counter() - t1
+                t2 = time.perf_counter()
                 save(self.ckpt_dir, step, host_tree, extra)
                 self._gc()
+                self.metrics.note_save(step, nbytes, snapshot_s, drain_s,
+                                       time.perf_counter() - t2)
             except BaseException as e:   # surfaced on next wait()
                 self._error.append(e)
 
@@ -150,9 +256,15 @@ class CheckpointManager:
             raise self._error.pop()
 
     def _gc(self) -> None:
-        steps = sorted(
-            int(d.split("_")[1]) for d in os.listdir(self.ckpt_dir)
-            if d.startswith("step_") and not d.endswith(".tmp"))
-        for s in steps[:-self.keep]:
+        """Retention + hygiene: keep the last ``keep`` committed steps,
+        drop everything stale — crashed saves' ``.tmp`` staging dirs and
+        quarantined ``.corrupt`` dirs included (they used to live
+        forever)."""
+        for d in os.listdir(self.ckpt_dir):
+            if d.startswith("step_") and (d.endswith(".tmp")
+                                          or d.endswith(".corrupt")):
+                shutil.rmtree(os.path.join(self.ckpt_dir, d),
+                              ignore_errors=True)
+        for s in valid_steps(self.ckpt_dir)[:-self.keep]:
             shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
                           ignore_errors=True)

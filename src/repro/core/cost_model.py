@@ -1234,6 +1234,117 @@ def decide_moe_dispatch(tokens_local: int, d_model: int, n_experts: int,
 
 
 # ---------------------------------------------------------------------------
+# Checkpoint cadence decision (the Young/Daly optimum as a managed knob)
+# ---------------------------------------------------------------------------
+#
+# Recovery traffic deserves the same alpha-beta treatment as the forward
+# collectives: a checkpoint costs δ seconds (on-device snapshot block +
+# the metered D2H drain; the disk write rides the writer thread), and a
+# failure with MTBF M loses on average half an interval of work plus the
+# restore.  First-order expected overhead per useful second at interval
+# τ seconds:
+#
+#     overhead(τ) = δ/τ + (τ/2 + R)/M            (Daly 2006, first order)
+#
+# minimised at the Young/Daly optimum τ* = sqrt(2 δ M).  Goodput — useful
+# steps per wall second including recovery — is step_s/(1+overhead).  The
+# decision quantises τ* to a candidate step interval N (checkpoints only
+# land on step boundaries), prices the whole candidate table, and reports
+# the fixed-cadence baseline (ckpt_every=25) for the speedup column.
+# Measured δ and write bandwidth come from checkpoint/metrics.py; the
+# step time is the train loop's EWMA — iteration k prices iteration k+1.
+
+
+#: default end-to-end checkpoint write bandwidth (D2H + serialisation)
+#: used before the first measured save; on-model for a host NVMe path
+CKPT_WRITE_BW = 2.0e9
+
+#: the unmanaged fixed cadence every prior PR shipped (TrainLoopConfig)
+CKPT_FIXED_INTERVAL = 25
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointDecision:
+    """Outcome of the checkpoint-cadence decision for one train loop."""
+    mode: str                      # "daly" | "fixed"
+    interval: int                  # chosen steps between checkpoints
+    step_s: float                  # instrumented step seconds (EWMA)
+    ckpt_cost_s: float             # δ — per-checkpoint critical-path cost
+    snapshot_bytes: int
+    write_bw: float                # bytes/s (measured or default)
+    mtbf_s: float
+    restore_s: float
+    daly_interval_s: float         # continuous τ* = sqrt(2 δ M)
+    overhead: dict[int, float]     # candidate N -> expected overhead frac
+    fixed_overhead: float          # overhead at CKPT_FIXED_INTERVAL
+    chosen_overhead: float
+
+    @property
+    def predicted_speedup(self) -> float:
+        """Modeled goodput gain over the fixed cadence."""
+        return (1.0 + self.fixed_overhead) / (1.0 + self.chosen_overhead)
+
+
+def checkpoint_overhead(interval_steps: int, step_s: float,
+                        ckpt_cost_s: float, mtbf_s: float,
+                        restore_s: float) -> float:
+    """Expected overhead fraction (non-useful seconds per useful second)
+    of checkpointing every ``interval_steps`` steps under MTBF failures."""
+    tau = max(1, int(interval_steps)) * max(step_s, 1e-12)
+    return (ckpt_cost_s / tau
+            + (0.5 * tau + restore_s) / max(mtbf_s, 1e-12))
+
+
+def decide_checkpoint(step_s: float, snapshot_bytes: int, *,
+                      mtbf_s: float = 1800.0,
+                      write_bw: float | None = None,
+                      ckpt_cost_s: float | None = None,
+                      restore_s: float | None = None,
+                      candidate_intervals: Sequence[int] = (2, 4, 5, 8, 10,
+                                                            20, 25, 50, 100,
+                                                            200),
+                      hw: HardwareModel = DEFAULT_HW,
+                      force_interval: int | None = None
+                      ) -> CheckpointDecision:
+    """Pick the checkpoint interval (steps) for one train loop.
+
+    δ defaults to ``snapshot_bytes / write_bw`` (the drain at the write
+    bandwidth; the snapshot block is a same-order HBM copy folded into
+    the bandwidth term) and is overridden by a measured ``ckpt_cost_s``
+    from checkpoint/metrics.py.  ``force_interval`` pins the choice (an
+    MDMPConfig bulk override = the fixed baseline, or an explicit
+    ``--ckpt-every``) while still reporting the modeled table."""
+    bw = float(write_bw) if write_bw else CKPT_WRITE_BW
+    delta = (float(ckpt_cost_s) if ckpt_cost_s is not None
+             else snapshot_bytes / bw)
+    delta = max(delta, 1e-9)
+    rest = (float(restore_s) if restore_s is not None
+            else snapshot_bytes / bw)
+    step = max(float(step_s), 1e-9)
+    tau_star = math.sqrt(2.0 * delta * max(mtbf_s, 1e-9))
+
+    cands = sorted({int(n) for n in candidate_intervals if n >= 1}
+                   | {CKPT_FIXED_INTERVAL})
+    overhead = {n: checkpoint_overhead(n, step, delta, mtbf_s, rest)
+                for n in cands}
+    fixed_ov = overhead[CKPT_FIXED_INTERVAL]
+    if force_interval is not None:
+        interval = max(1, int(force_interval))
+        mode = "fixed"
+        if interval not in overhead:
+            overhead[interval] = checkpoint_overhead(interval, step, delta,
+                                                     mtbf_s, rest)
+    else:
+        interval = min(cands, key=lambda n: (overhead[n], n))
+        mode = "daly"
+    return CheckpointDecision(
+        mode=mode, interval=interval, step_s=step, ckpt_cost_s=delta,
+        snapshot_bytes=int(snapshot_bytes), write_bw=bw, mtbf_s=mtbf_s,
+        restore_s=rest, daly_interval_s=tau_star, overhead=overhead,
+        fixed_overhead=fixed_ov, chosen_overhead=overhead[interval])
+
+
+# ---------------------------------------------------------------------------
 # Roofline terms (used by benchmarks/roofline.py on dry-run artifacts)
 # ---------------------------------------------------------------------------
 

@@ -990,6 +990,46 @@ def resolve_serve_schedule(axis_name: str, batch_slots: int,
     return decision
 
 
+def resolve_checkpoint(axis_name: str, step_s: float, snapshot_bytes: int,
+                       *, mtbf_s: float = 1800.0,
+                       measured_write_bw: float | None = None,
+                       measured_ckpt_cost_s: float | None = None,
+                       measured_restore_s: float | None = None,
+                       mode: str | None = None,
+                       interval: int | None = None
+                       ) -> cost_model.CheckpointDecision:
+    """The managed-runtime entry for the checkpoint-cadence knob (the
+    Young/Daly interval) — the analogue of ``resolve_serve_schedule`` for
+    the fault-tolerance path.  Called by ``TrainLoop`` between steps with
+    the EWMA step time and checkpoint/metrics.py's measured write
+    bandwidth / per-checkpoint cost; the chosen interval drives the next
+    ``save_async`` and lands in the decision log.
+
+    ``mode='bulk'`` pins the fixed ``ckpt_every=25`` baseline (the
+    unmanaged cadence every prior PR shipped); an explicit ``interval``
+    wins over the ambient mode (same precedence as every other managed
+    knob).  The DecisionRecord reuses ``chunks`` to carry the interval
+    and the predicted fields to carry overhead fractions (fixed vs
+    chosen)."""
+    cfg = get_config()
+    eff_mode = mode or cfg.mode
+    force = interval if interval is not None else (
+        cost_model.CKPT_FIXED_INTERVAL if eff_mode == "bulk" else None)
+    decision = cost_model.decide_checkpoint(
+        step_s, snapshot_bytes, mtbf_s=mtbf_s,
+        write_bw=measured_write_bw,
+        ckpt_cost_s=measured_ckpt_cost_s,
+        restore_s=measured_restore_s, hw=cfg.hw, force_interval=force)
+    if cfg.log_decisions:
+        _DECISION_LOG.append(DecisionRecord(
+            op="ckpt_interval", axis=axis_name,
+            nbytes=int(snapshot_bytes),
+            mode=decision.mode, chunks=decision.interval,
+            predicted_bulk_s=decision.fixed_overhead,
+            predicted_interleaved_s=decision.chosen_overhead))
+    return decision
+
+
 # ---------------------------------------------------------------------------
 # Managed expert dispatch (expert parallelism)
 #

@@ -173,6 +173,24 @@ def bucketed_all_reduce(grads: Any, axis_name: str, *,
     return jax.tree.unflatten(treedef, out_leaves)
 
 
+def drain_chunk_bytes(step_s: float, write_bw: float, *,
+                      budget: float = 0.1,
+                      min_bytes: int = 1 << 16,
+                      max_bytes: int = 1 << 27) -> int:
+    """Chunk size for a checkpoint's D2H drain, metered under the overlap
+    budget: each chunk's device->host pull may stall the step stream for
+    at most ``budget`` of one step's compute, so
+
+        chunk_bytes = budget * step_s * write_bw
+
+    — the same alpha-beta reasoning as the collective chunking, applied
+    to recovery traffic.  A whole-tree blocking device_get is the
+    ``budget=inf`` bulk baseline (what save_async did before the drain
+    was managed); tiny chunks pay per-transfer latency, the dual knob."""
+    want = int(max(0.0, budget) * max(step_s, 1e-6) * max(write_bw, 1.0))
+    return max(min_bytes, min(max_bytes, want))
+
+
 def grad_accumulate(step_grads_fn, microbatches: int, *, mean: bool = True):
     """Gradient accumulation driver: ``step_grads_fn(mb) -> (loss, grads)``
     over ``microbatches`` stacked microbatches (leading axis).  Returns a

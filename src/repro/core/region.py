@@ -215,6 +215,23 @@ class CommRegion:
                    int(max_prompt if max_prompt is not None
                        else mean_prompt), int(n_params), int(ib))))
 
+    def checkpoint(self, label: str, *, axis: str, snapshot_bytes: int,
+                   step_s: float, mtbf_s: float = 1800.0,
+                   write_bw: float | None = None) -> None:
+        """Declare the checkpoint recovery traffic of a train loop (the
+        D2H snapshot drain, ``snapshot_bytes`` per save).  Planning runs
+        the Young/Daly cadence decision for it: the resulting PlanEntry's
+        ``chunks`` is the chosen interval in steps (``mode`` is "daly" |
+        "fixed"), read back via ``plan.chunks_for(label)`` and fed to
+        ``TrainLoopConfig.ckpt_every`` — recovery traffic priced like any
+        other declared communication."""
+        self._specs.append(CommSpec(
+            label=label, kind="ckpt", axis=axis,
+            nbytes=int(snapshot_bytes), collective="ckpt",
+            shape=(int(snapshot_bytes), int(round(step_s * 1e9)),
+                   int(round(mtbf_s)),
+                   int(round(write_bw)) if write_bw else 0)))
+
     # -- planning -----------------------------------------------------------
 
     def plan(self, fn: Callable, *example_args: Any,
@@ -302,6 +319,23 @@ class CommRegion:
                     spec=spec, mode=d.schedule, chunks=d.g,
                     overlap_budget=1.0, predicted_bulk_s=d.bulk_s,
                     predicted_interleaved_s=d.chosen_s)
+                continue
+            if spec.kind == "ckpt":
+                # The cadence knob: the Young/Daly interval, routed
+                # through the managed runtime so the choice lands in the
+                # MDMP decision log — recovery traffic priced like the
+                # forward-path collectives.
+                nbytes, step_ns, mtbf_s, bw = spec.shape
+                with managed.use_config(self.config):
+                    d = managed.resolve_checkpoint(
+                        spec.axis, step_ns * 1e-9, nbytes,
+                        mtbf_s=float(mtbf_s),
+                        measured_write_bw=float(bw) if bw else None)
+                entries[spec.label] = PlanEntry(
+                    spec=spec, mode=d.mode, chunks=d.interval,
+                    overlap_budget=1.0,
+                    predicted_bulk_s=d.fixed_overhead,
+                    predicted_interleaved_s=d.chosen_overhead)
                 continue
             if spec.kind == "serve":
                 # The batching knob: static waves vs continuous batching

@@ -19,6 +19,7 @@ import dataclasses
 import json
 import math
 import os
+import re
 from typing import Any
 
 from repro.core import cost_model
@@ -78,6 +79,12 @@ class ScheduleTuner:
     #: dense-fallback), ``chunks`` the stream chunk count g
     MOE_CANDIDATES = (("bulk", 1), ("stream", 2), ("stream", 4),
                       ("dense", 1))
+
+    #: candidate (mode, N) variants for checkpoint-cadence call sites —
+    #: ``mode`` carries fixed/daly, ``chunks`` the interval in steps
+    #: (fixed:25 is the unmanaged baseline every prior PR shipped)
+    CKPT_CANDIDATES = (("fixed", 25), ("daly", 4), ("daly", 10),
+                       ("daly", 50))
 
     def __init__(self, hw: HardwareModel = TPU_V5E,
                  path: str | None = None):
@@ -230,6 +237,31 @@ class ScheduleTuner:
             self._entries[key] = entry
         return entry
 
+    def decide_ckpt(self, axis: str, axis_size: int, snapshot_bytes: int,
+                    step_s: float, *, mtbf_s: float = 1800.0,
+                    write_bw: float | None = None,
+                    ckpt_cost_s: float | None = None,
+                    restore_s: float | None = None) -> TunerEntry:
+        """Cadence decision for a checkpoint call site: seeded from the
+        Young/Daly cost model (``mode`` carries fixed/daly, ``chunks``
+        the interval in steps), then overridden by measured overhead fed
+        back through ``record(key, "daly", N, overhead)`` — and
+        re-resolved online by the train loop as the EWMA step time and
+        measured write bandwidth (checkpoint/metrics.py) drift.
+        Persisted like every other entry so the cadence survives
+        restarts (it rides along with the checkpoint itself)."""
+        key = call_site_key("ckpt_interval", (int(snapshot_bytes),),
+                            "bytes", axis, axis_size)
+        entry = self._entries.get(key)
+        if entry is None:
+            d = cost_model.decide_checkpoint(
+                step_s, snapshot_bytes, mtbf_s=mtbf_s, write_bw=write_bw,
+                ckpt_cost_s=ckpt_cost_s, restore_s=restore_s, hw=self.hw)
+            entry = TunerEntry(key=key, mode=d.mode, chunks=d.interval,
+                               predicted_s=d.chosen_overhead)
+            self._entries[key] = entry
+        return entry
+
     # -- measurement feedback (iteration k informs iteration k+1) -----------
 
     def record(self, key: str, mode: str, chunks: int,
@@ -264,6 +296,8 @@ class ScheduleTuner:
                       if key.startswith("pipeline")
                       else self.MOE_CANDIDATES
                       if key.startswith("moe")
+                      else self.CKPT_CANDIDATES
+                      if key.startswith("ckpt")
                       else self.CANDIDATES)
         entry = self._entries.get(key)
         if entry is None:
@@ -290,10 +324,136 @@ class ScheduleTuner:
 
     def load(self, path: str) -> None:
         with open(path) as f:
-            raw = json.load(f)
+            self.load_entries(json.load(f))
+
+    def load_entries(self, raw: dict) -> None:
+        """Install entries from a ``to_json``-shaped dict (e.g. the tuner
+        state a checkpoint carried along)."""
         for k, v in raw.items():
             self._entries[k] = TunerEntry(**v)
 
     @property
     def entries(self) -> dict[str, TunerEntry]:
         return dict(self._entries)
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-planning — persisted winners replayed onto a new topology
+# ---------------------------------------------------------------------------
+
+
+_DTYPE_BYTES = {"float64": 8, "float32": 4, "int32": 4, "bfloat16": 2,
+                "float16": 2, "float8_e4m3fn": 1, "float8_e5m2": 1,
+                "int8": 1, "bytes": 1}
+
+
+def parse_call_site_key(key: str) -> tuple[str, tuple[int, ...], str,
+                                           str, int]:
+    """Invert ``call_site_key`` -> (op, shape, dtype, axis, axis_size)."""
+    op, shape_s, dtype, axis_tag = key.split("|")
+    shape = tuple(int(x) for x in shape_s.split("x")) if shape_s else ()
+    m = re.match(r"^(.*?)(\d+)$", axis_tag)
+    assert m, f"unparseable axis tag in tuner key {key!r}"
+    return op, shape, dtype, m.group(1), int(m.group(2))
+
+
+def replan_for_mesh(tuner: ScheduleTuner, new_axis_sizes: dict[str, int],
+                    *, step_s: float = 0.1, mtbf_s: float = 1800.0
+                    ) -> list[dict]:
+    """Replay every persisted tuner winner onto a NEW topology.
+
+    An N-way-mesh checkpoint restoring onto M ranks invalidates every
+    tuned call-site key (keys embed ``axis{axis_size}``, and the per-rank
+    operand geometry changes with the shard count).  This pass walks the
+    persisted entries, rescales each call site's per-rank shape to the
+    new axis extent (total work is conserved: ``local' = local * n_old /
+    n_new``), re-resolves the subsystem's managed decision with the OLD
+    winner pinned — so the decision trail shows the replay, old->new —
+    and installs a fresh entry under the new-topology key carrying the
+    winner forward.  Measurements do NOT transfer (a different topology
+    is a different machine as far as wall clocks go): the new entries
+    start unmeasured, and the normal iteration-(k)->(k+1) loop re-earns
+    or overturns each winner.
+
+    Returns one record per replayed entry:
+    ``{op, axis, old_key, new_key, mode, chunks, old_n, new_n}``.
+    """
+    from repro.core import managed
+
+    replayed: list[dict] = []
+    for old_key, old in sorted(tuner.entries.items()):
+        try:
+            op, shape, dtype, axis, n_old = parse_call_site_key(old_key)
+        except (ValueError, AssertionError):
+            continue
+        n_new = int(new_axis_sizes.get(axis, n_old))
+        ib = _DTYPE_BYTES.get(dtype, 4)
+
+        def rescale(local: int) -> int:
+            return max(1, local * n_old // max(1, n_new))
+
+        if op == "halo_jacobi" and len(shape) == 2:
+            rows_local, cols = rescale(shape[0]), shape[1]
+            managed.resolve_halo_aggregation(
+                axis, n_new, rows_local, cols, dtype_bytes=ib,
+                k=old.chunks)
+            entry = tuner.decide_halo(axis, n_new, rows_local, cols,
+                                      dtype_str=dtype, dtype_bytes=ib)
+        elif op == "attention_sp" and len(shape) == 7:
+            b, s_local, h, kv, hd, d_model, causal = shape
+            s_local = rescale(s_local)
+            managed.resolve_attention_schedule(
+                axis, n_new, b, s_local, h, kv, hd, d_model,
+                dtype_bytes=ib, causal=bool(causal), schedule=old.mode)
+            entry = tuner.decide_attention(
+                axis, n_new, b, s_local, h, kv, hd, d_model,
+                dtype_str=dtype, dtype_bytes=ib, causal=bool(causal))
+        elif op == "pipeline" and len(shape) >= 2:
+            n_layers, batch_shape = shape[0], shape[1:]
+            rows, width = batch_shape[0], batch_shape[-1]
+            batch_bytes = rows * width * ib
+            # per-stage forward estimate: ~2 GEMM flops per element over
+            # this stage's layer share (the bench's formula)
+            batch_fwd_s = (2.0 * 2.0 * rows * width * width
+                           * (n_layers / max(1, n_new))
+                           / tuner.hw.peak_flops)
+            managed.resolve_pipeline_schedule(
+                axis, n_new, batch_fwd_s, batch_bytes, n_layers=n_layers,
+                schedule=old.mode, n_micro=old.chunks,
+                virtual=2 if old.mode == "interleaved" else 1)
+            entry = tuner.decide_pipeline(axis, n_new, n_layers,
+                                          batch_shape, batch_fwd_s,
+                                          batch_bytes, dtype_str=dtype)
+        elif op == "moe_dispatch" and len(shape) == 6:
+            t_loc, d_model, e, k, f, cap = shape
+            t_loc = rescale(t_loc)
+            cf = cap * e / max(1, shape[0] * k)      # invert moe_capacity
+            managed.resolve_moe_dispatch(
+                axis, n_new, t_loc, d_model, e, k, f, dtype_bytes=ib,
+                capacity_factor=cf, schedule=old.mode, g=old.chunks)
+            entry = tuner.decide_moe(axis, n_new, t_loc, d_model, e, k, f,
+                                     dtype_str=dtype, dtype_bytes=ib,
+                                     capacity_factor=cf)
+        elif op == "serve_schedule" and len(shape) == 4:
+            slots, mp, mn, n_params = shape
+            slots = int(new_axis_sizes.get(axis, slots))
+            managed.resolve_serve_schedule(
+                axis, slots, float(mp), float(mn), float(n_params),
+                dtype_bytes=ib, schedule=old.mode, chunk=old.chunks)
+            entry = tuner.decide_serve(slots, mp, mn, n_params,
+                                       dtype_str=dtype, dtype_bytes=ib)
+        elif op == "ckpt_interval" and len(shape) == 1:
+            managed.resolve_checkpoint(
+                axis, step_s, shape[0], mtbf_s=mtbf_s,
+                interval=old.chunks)
+            entry = tuner.decide_ckpt(axis, n_new, shape[0], step_s,
+                                      mtbf_s=mtbf_s)
+        else:
+            continue
+        # the replayed winner carries forward; measurements start fresh
+        entry.mode, entry.chunks = old.mode, old.chunks
+        replayed.append({"op": op, "axis": axis, "old_key": old_key,
+                         "new_key": entry.key, "mode": old.mode,
+                         "chunks": old.chunks, "old_n": n_old,
+                         "new_n": n_new})
+    return replayed

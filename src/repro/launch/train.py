@@ -51,6 +51,17 @@ def main() -> None:
     ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--compress-pod", action="store_true")
+    ap.add_argument("--ckpt-every", default=None,
+                    help="checkpoint interval in steps, or 'auto' for "
+                         "the managed Young/Daly cadence (re-resolved "
+                         "online from measured step time + write bw)")
+    ap.add_argument("--mtbf", type=float, default=1800.0,
+                    help="assumed mean time between failures, seconds "
+                         "(feeds the Young/Daly cadence)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="deterministic fault injection spec, e.g. "
+                         "'transient@6;slow@9:0.5;corrupt@14' "
+                         "(core/faults.py grammar)")
     args = ap.parse_args()
 
     import dataclasses
@@ -99,14 +110,39 @@ def main() -> None:
     data = SyntheticLMData(DataConfig(vocab_size=cfg.vocab_size,
                                       seq_len=args.seq,
                                       global_batch=args.batch))
+    managed_cadence = args.ckpt_every == "auto"
+    ckpt_every = (max(5, args.steps // 4)
+                  if args.ckpt_every in (None, "auto")
+                  else int(args.ckpt_every))
+    from repro.core.faults import FaultPlan
+    from repro.core.tuner import ScheduleTuner
+    fault_plan = (FaultPlan.parse(args.fault_plan)
+                  if args.fault_plan else None)
     loop = TrainLoop(step_fn, model, opt_cfg, data,
                      TrainLoopConfig(total_steps=args.steps,
-                                     ckpt_every=max(5, args.steps // 4),
-                                     ckpt_dir=args.ckpt),
-                     pshard, bshard)
+                                     ckpt_every=ckpt_every,
+                                     ckpt_dir=args.ckpt,
+                                     managed_cadence=managed_cadence,
+                                     mtbf_s=args.mtbf),
+                     pshard, bshard, tuner=ScheduleTuner(),
+                     fault_plan=fault_plan)
     params, opt, s0 = (loop.resume_or_init() if args.resume
                        else loop.init_state())
     out = loop.run(params, opt, s0)
+    for rec in managed_lib.decision_log():
+        if rec.op == "ckpt_interval":
+            print(f"decision ckpt_interval({rec.mode} N={rec.chunks} "
+                  f"axis={rec.axis} snap={rec.nbytes/1e6:.1f}MB "
+                  f"fixed_ovh={rec.predicted_bulk_s:.4f} "
+                  f"chosen_ovh={rec.predicted_interleaved_s:.4f})")
+    for r in out["replayed"]:
+        print(f"replan {r['op']}: {r['mode']}:{r['chunks']} "
+              f"{r['axis']}{r['old_n']} -> {r['axis']}{r['new_n']}")
+    if fault_plan is not None:
+        left = fault_plan.unfired()
+        print(f"faults injected={len(fault_plan.events) - len(left)} "
+              f"unfired={len(left)} restarts={out['restarts']} "
+              f"steps_executed={out['steps_executed']}")
     if args.moe_dispatch is not None:
         # the dispatch decision fires at trace time (first step); print
         # the unique trail entries the managed runtime logged

@@ -30,6 +30,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.faults import FaultPlan
 from repro.models.model import Model
 from repro.parallel.sharding import smap, spec_pspecs
 from repro.serve.kv_cache import PagedCacheConfig, PageTable
@@ -82,7 +83,8 @@ class ServeEngine:
                  slots: int = 4, max_seq: int = 256, page_size: int = 8,
                  n_pages: int | None = None, schedule: str = "auto",
                  chunk: int | None = None,
-                 metrics: ServeMetrics | None = None, tuner: Any = None):
+                 metrics: ServeMetrics | None = None, tuner: Any = None,
+                 fault_plan: FaultPlan | None = None):
         from repro.models import attention
         self.model = model
         self.mesh = mesh
@@ -109,6 +111,9 @@ class ServeEngine:
         self._rid = 0
         self._retuned = False
         self._variant_q0 = 0      # quanta index of the variant's window
+        self.fault_plan = fault_plan
+        self._quantum_idx = 0     # lifetime quantum counter (fault clock)
+        self.results: dict[int, np.ndarray] = {}
         self.cache = self._empty_cache()
 
     # -- device state --------------------------------------------------------
@@ -147,11 +152,26 @@ class ServeEngine:
         self._rid += 1
         req = Request(rid=rid, prompt=np.asarray(prompt, np.int32).ravel(),
                       max_new=int(max_new))
+        self.submit_request(req)
+        return rid
+
+    def submit_request(self, req: Request) -> None:
+        """Submit a pre-built request, preserving its rid — the failover
+        path: a drained replica's requests re-admit here with their
+        generated prefix folded into the prompt."""
         assert len(req.prompt) + req.max_new <= \
             self.cache_cfg.max_pages_per_seq * self.cache_cfg.page_size, \
-            f"request {rid} exceeds max_seq"
+            f"request {req.rid} exceeds max_seq"
+        self._rid = max(self._rid, req.rid + 1)
         self.scheduler.submit(req, self.metrics)
-        return rid
+
+    def drain(self) -> list[tuple[Request, list[int]]]:
+        """Evacuate a dead replica: free every in-flight request's page
+        chain and hand back [(request, generated_prefix)] rebuilt for a
+        survivor (scheduler.drain).  Finished requests stay in
+        ``self.results``; the caller stitches prefix + survivor output
+        for the rest."""
+        return self.scheduler.drain(self.pt)
 
     # -- the step loop -------------------------------------------------------
 
@@ -169,7 +189,7 @@ class ServeEngine:
         # running variant's measurement window starts empty
         self.metrics.rebase_pending()
         self._variant_q0 = len(self.metrics.quanta)
-        results: dict[int, np.ndarray] = {}
+        results = self.results
         while sch.has_work():
             sch.admit(self.pt)
             plan = sch.plan_quantum(sch.chunk)
@@ -182,6 +202,12 @@ class ServeEngine:
             for slot, rs in sch.active.items():
                 self.pt.ensure(slot,
                                rs.consumed + int(plan.steps[slot]))
+            if self.fault_plan is not None:
+                # the fault clock ticks on dispatched quanta; a
+                # replica_death here leaves finished work in self.results
+                # and in-flight state intact for drain()
+                self.fault_plan.serve_quantum(self._quantum_idx)
+            self._quantum_idx += 1
             t0 = time.perf_counter()
             out, self.cache = self._step_fn(plan.chunk)(
                 self.params, self.cache, jnp.asarray(self.pt.table),

@@ -163,6 +163,41 @@ class ServeScheduler:
             newly.append(rs)
         return newly
 
+    # -- failover ------------------------------------------------------------
+
+    def drain(self, pt: PageTable) -> list[tuple[Request, list[int]]]:
+        """Evacuate this (dead) replica's work for re-admission elsewhere.
+
+        Every in-flight request's page chain returns to the free list and
+        the request is rebuilt for a survivor: prompt' = prompt + the
+        tokens already generated here, max_new' = the remainder — so the
+        survivor's prefill REPLAYS the dead replica's progress and greedy
+        decoding continues the exact chain (total_steps is conserved:
+        (P + g) + (N - g) - 1 = P + N - 1).  Pending requests pass
+        through unchanged.  Returns [(request, generated_prefix)] in
+        admission order; the caller stitches prefix + survivor output.
+        """
+        out: list[tuple[Request, list[int]]] = []
+        for slot, rs in sorted(self.active.items()):
+            pt.release(slot)
+            prefix = list(rs.generated)
+            if prefix:
+                req = Request(
+                    rid=rs.req.rid,
+                    prompt=np.concatenate(
+                        [rs.req.prompt,
+                         np.asarray(prefix, np.int32)]),
+                    max_new=rs.req.max_new - len(prefix))
+            else:
+                req = rs.req
+            out.append((req, prefix))
+        out.extend((req, []) for req in self.pending)
+        self.active.clear()
+        self.pending.clear()
+        self._free_slots = list(range(self.slots - 1, -1, -1))
+        self._committed_pages = 0
+        return out
+
     # -- quantum planning / retirement ---------------------------------------
 
     def plan_quantum(self, chunk: int) -> QuantumPlan:

@@ -18,6 +18,7 @@ straggler detection via step-time EWMA, elastic resume on a different mesh.
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from functools import partial
 from typing import Any, Callable
@@ -29,7 +30,9 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import checkpoint as ckpt_lib
-from repro.core import managed
+from repro.core import managed, overlap
+from repro.core import tuner as tuner_lib
+from repro.core.faults import FaultPlan
 from repro.data.pipeline import SyntheticLMData
 from repro.models import layers as model_layers
 from repro.models import transformer
@@ -302,21 +305,36 @@ class TrainLoopConfig:
     max_retries: int = 3
     straggler_factor: float = 3.0       # step > factor * EWMA -> straggler
     ewma: float = 0.9
+    managed_cadence: bool = False       # Young/Daly-chosen ckpt interval
+    mtbf_s: float = 1800.0              # assumed mean time between failures
 
 
 class TrainLoop:
     """Drives (step fn, data, checkpoints) with restart-on-failure.
 
-    ``fault_hook(step)`` (tests) may raise to simulate a node failure; the
-    loop restores the latest checkpoint and retries.  Step times feed a
-    straggler detector (on real pods this triggers re-balancing / host
-    replacement; here it logs and counts).
+    ``fault_hook(step)`` (tests) may raise to simulate a node failure, and
+    ``fault_plan`` injects the deterministic fault taxonomy of
+    core/faults.py; the loop restores the latest readable checkpoint and
+    retries.  Step times feed a straggler detector (on real pods this
+    triggers re-balancing / host replacement; here it logs and counts).
+
+    With ``managed_cadence`` the checkpoint interval is a managed knob:
+    ``managed.resolve_checkpoint`` re-resolves the Young/Daly optimum
+    between steps from the EWMA step time and checkpoint/metrics.py's
+    measured write bandwidth / snapshot cost, logging each pick as a
+    ``DecisionRecord(op="ckpt_interval")``.  A ``tuner`` persists the
+    winner (it rides along inside the checkpoint's ``extra``), and on an
+    elastic resume — checkpoint written on a different mesh — every
+    persisted tuner winner is replayed onto the new topology in one
+    ``tuner.replan_for_mesh`` pass (``self.replayed`` keeps the trail).
     """
 
     def __init__(self, step_fn: Callable, model: Model, opt_cfg: AdamWConfig,
                  data: SyntheticLMData, loop_cfg: TrainLoopConfig,
                  param_shardings: Any, batch_shardings: Any,
-                 fault_hook: Callable[[int], None] | None = None):
+                 fault_hook: Callable[[int], None] | None = None, *,
+                 tuner: tuner_lib.ScheduleTuner | None = None,
+                 fault_plan: FaultPlan | None = None):
         self.step_fn = step_fn
         self.model = model
         self.opt_cfg = opt_cfg
@@ -324,9 +342,26 @@ class TrainLoop:
         self.cfg = loop_cfg
         self.param_shardings = param_shardings
         self.batch_shardings = batch_shardings
-        self.fault_hook = fault_hook
+        self.tuner = tuner
+        self.fault_plan = fault_plan
+        hooks = [h for h in (
+            fault_hook,
+            fault_plan.train_hook(ckpt_dir=loop_cfg.ckpt_dir)
+            if fault_plan is not None else None) if h is not None]
+        self.fault_hook = (
+            (lambda step: [h(step) for h in hooks]) if hooks else None)
+        self.ckpt_metrics = ckpt_lib.CheckpointMetrics()
         self.mgr = ckpt_lib.CheckpointManager(loop_cfg.ckpt_dir,
-                                              keep=loop_cfg.keep)
+                                              keep=loop_cfg.keep,
+                                              metrics=self.ckpt_metrics)
+        self.ckpt_interval = max(1, loop_cfg.ckpt_every)
+        self.ckpt_decisions: list = []       # CheckpointDecision trail
+        self.replayed: list[dict] = []       # elastic replan records
+        self._resolved_step_s: float | None = None
+        self._mesh_axis = "mesh"
+        self._mesh_size = 1
+        for n in model.ctx.axis_sizes.values():
+            self._mesh_size *= int(n)
         self.stragglers: list[int] = []
         self.restarts = 0
         self.history: list[dict] = []
@@ -340,23 +375,92 @@ class TrainLoop:
         return params, opt, 0
 
     def resume_or_init(self, seed: int = 0) -> tuple[Any, Any, int]:
-        step = ckpt_lib.latest_step(self.cfg.ckpt_dir)
-        if step is None:
-            return self.init_state(seed)
         params, opt, _ = self.init_state(seed)
         like = {"params": params, "opt": opt}
-        tree, extra = ckpt_lib.restore(
-            self.cfg.ckpt_dir, step, like,
+        t0 = time.monotonic()
+        hit = ckpt_lib.restore_latest(
+            self.cfg.ckpt_dir, like,
             shardings={"params": self.param_shardings,
                        "opt": {"mu": self.param_shardings,
                                "nu": self.param_shardings,
                                "step": None}})
-        return tree["params"], tree["opt"], int(extra["step"])
+        if hit is None:
+            return params, opt, 0
+        tree, extra, ck_step = hit
+        self.ckpt_metrics.note_restore(ck_step, time.monotonic() - t0)
+        step = int(extra.get("step", ck_step))
+        if "data" in extra:
+            # the data pipeline resumes WITH the model: dropping its state
+            # used to replay batches the optimizer had already consumed
+            self.data, _ = SyntheticLMData.resume(self.data.cfg,
+                                                  extra["data"])
+        if self.tuner is not None and "tuner" in extra:
+            self.tuner.load_entries(extra["tuner"])
+            mesh_now = self._mesh_dict()
+            mesh_then = {k: int(v)
+                         for k, v in extra.get("mesh", mesh_now).items()}
+            if mesh_then != mesh_now:
+                # elastic resume: N-way winners replayed onto M ranks
+                sizes = dict(mesh_now)
+                sizes[self._mesh_axis] = self._mesh_size
+                self.replayed += tuner_lib.replan_for_mesh(
+                    self.tuner, sizes,
+                    step_s=self._resolved_step_s or 0.1,
+                    mtbf_s=self.cfg.mtbf_s)
+        return tree["params"], tree["opt"], step
+
+    def _mesh_dict(self) -> dict[str, int]:
+        return {k: int(v) for k, v in self.model.ctx.axis_sizes.items()}
 
     def _batch(self, step: int) -> Any:
         g = self.data.global_batch_at(step)
         return {k: jax.device_put(v, self.batch_shardings[k])
                 if k in self.batch_shardings else v for k, v in g.items()}
+
+    # -- managed checkpoint cadence -------------------------------------------
+
+    def _resolve_cadence(self, step_s: float, snapshot_bytes: int) -> None:
+        """Re-resolve the Young/Daly interval from live measurements: the
+        EWMA step time plus checkpoint/metrics.py's measured write
+        bandwidth, snapshot cost and restore time.  Logged as a
+        DecisionRecord(op="ckpt_interval"); the winner persists via the
+        tuner (riding along inside the next checkpoint)."""
+        m = self.ckpt_metrics
+        d = managed.resolve_checkpoint(
+            self._mesh_axis, step_s, snapshot_bytes,
+            mtbf_s=self.cfg.mtbf_s,
+            measured_write_bw=m.write_bw_estimate(),
+            measured_ckpt_cost_s=m.ckpt_cost_s_estimate(),
+            measured_restore_s=m.restore_s_estimate())
+        self.ckpt_interval = max(1, int(d.interval))
+        self.ckpt_decisions.append(d)
+        self._resolved_step_s = step_s
+        # re-meter the async drain's D2H chunking to the current step time
+        self.mgr.drain_chunk_bytes = overlap.drain_chunk_bytes(
+            step_s, d.write_bw)
+        if self.tuner is not None:
+            entry = self.tuner.decide_ckpt(
+                self._mesh_axis, self._mesh_size, snapshot_bytes, step_s,
+                mtbf_s=self.cfg.mtbf_s, write_bw=m.write_bw_estimate(),
+                ckpt_cost_s=m.ckpt_cost_s_estimate(),
+                restore_s=m.restore_s_estimate())
+            cost = m.ckpt_cost_s_estimate()
+            if cost is not None:
+                # realized overhead of the cadence we actually ran
+                tau = self.ckpt_interval * step_s
+                overhead = (cost / tau
+                            + (0.5 * tau + (m.restore_s_estimate() or 0.0))
+                            / self.cfg.mtbf_s)
+                self.tuner.record(entry.key, d.mode, self.ckpt_interval,
+                                  overhead)
+
+    def _save(self, step: int, params: Any, opt: Any) -> None:
+        extra = {"step": step, "data": self.data.state_dict(step),
+                 "mesh": self._mesh_dict()}
+        if self.tuner is not None:
+            extra["tuner"] = json.loads(self.tuner.to_json())
+        self.mgr.save_async(step, {"params": params, "opt": opt},
+                            extra=extra)
 
     # -- the loop --------------------------------------------------------------
 
@@ -365,6 +469,14 @@ class TrainLoop:
         step = start_step
         retries = 0
         ewma_t: float | None = None
+        warmup_until = start_step + 2
+        last_saved = start_step
+        steps_executed = 0
+        wall_t0 = time.monotonic()
+        snapshot_bytes = sum(
+            leaf.size * leaf.dtype.itemsize
+            for leaf in jax.tree.leaves({"params": params, "opt": opt})
+            if hasattr(leaf, "size"))
         while step < cfg.total_steps:
             batch = self._batch(step)
             t0 = time.monotonic()
@@ -382,25 +494,42 @@ class TrainLoop:
                     raise
                 self.mgr.wait()
                 params, opt, step = self.resume_or_init()
+                last_saved = step
+                # the EWMA window must restart: the first post-restore
+                # steps re-compile/re-warm, and judging them against the
+                # pre-fault EWMA flags every recovery as a straggler
+                warmup_until = step + 2
                 continue
             retries = 0
+            steps_executed += 1
             dt = time.monotonic() - t0
-            if ewma_t is not None and dt > cfg.straggler_factor * ewma_t:
+            in_warmup = step < warmup_until
+            if (not in_warmup and ewma_t is not None
+                    and dt > cfg.straggler_factor * ewma_t):
                 self.stragglers.append(step)
-            if step < start_step + 2:
-                pass      # first steps include (re)compiles: not in EWMA
+            if in_warmup:
+                pass      # (re)compile steps: neither EWMA nor straggler
             elif ewma_t is None:
                 ewma_t = dt
             else:
                 ewma_t = cfg.ewma * ewma_t + (1 - cfg.ewma) * dt
             self.history.append({"step": step, "loss": loss,
                                  "time_s": dt})
+            if cfg.managed_cadence and ewma_t is not None and (
+                    self._resolved_step_s is None
+                    or abs(ewma_t - self._resolved_step_s)
+                    > 0.25 * self._resolved_step_s):
+                self._resolve_cadence(ewma_t, snapshot_bytes)
             step += 1
-            if step % cfg.ckpt_every == 0 or step == cfg.total_steps:
-                self.mgr.save_async(step, {"params": params, "opt": opt},
-                                    extra={"step": step,
-                                           "data": self.data.state_dict(step)})
+            if step - last_saved >= self.ckpt_interval \
+                    or step == cfg.total_steps:
+                self._save(step, params, opt)
+                last_saved = step
         self.mgr.wait()
         return {"params": params, "opt": opt, "step": step,
                 "history": self.history, "stragglers": self.stragglers,
-                "restarts": self.restarts}
+                "restarts": self.restarts,
+                "steps_executed": steps_executed,
+                "wall_s": time.monotonic() - wall_t0,
+                "ckpt_interval": self.ckpt_interval,
+                "replayed": self.replayed}

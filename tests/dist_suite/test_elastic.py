@@ -67,3 +67,80 @@ def test_elastic_resume_across_meshes(tmp_path):
             jax.tree_util.tree_flatten_with_path(p_b)[0]):
         np.testing.assert_allclose(a, b, rtol=2e-4, atol=1e-5,
                                    err_msg=f"elastic {k1}")
+
+
+def test_elastic_trainloop_resume_replans_tuner_winners(tmp_path):
+    """Full TrainLoop elastic resume: a (1,1)-mesh checkpoint carrying
+    persisted tuner winners restores onto (2,2); every winner is replayed
+    onto the new topology in one replan_for_mesh pass (decision trail
+    records old->new), and the continued run matches the straight-through
+    (2,2) oracle."""
+    from repro.core import managed
+    from repro.core.tuner import ScheduleTuner
+    from repro.train.train_loop import TrainLoop, TrainLoopConfig
+
+    cfg = dataclasses.replace(configs.get_reduced("granite-34b"),
+                              dtype="float32")
+    opt_cfg = AdamWConfig(lr=1e-2)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                          global_batch=4)
+
+    def make_loop(mesh_shape, ckpt_dir, total, tuner):
+        mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+        model = Model(cfg, MeshCtx.from_mesh(mesh, mdmp_mode="bulk"))
+        step_fn, pshard, bshard = build_train_step(model, opt_cfg, mesh,
+                                                   donate=False)
+        return TrainLoop(step_fn, model, opt_cfg,
+                         SyntheticLMData(data_cfg),
+                         TrainLoopConfig(total_steps=total, ckpt_every=2,
+                                         ckpt_dir=ckpt_dir),
+                         pshard, bshard, tuner=tuner)
+
+    # oracle: 4 steps straight through on (2, 2)
+    oracle = make_loop((2, 2), str(tmp_path / "oracle"), 4,
+                       ScheduleTuner())
+    out_ref = oracle.run(*oracle.init_state(seed=0))
+
+    # phase 1 on (1, 1): measured tuner winners accumulate, then persist
+    # inside the step-2 checkpoint's extra
+    tuner_a = ScheduleTuner()
+    halo = tuner_a.decide_halo("data", 1, 1024, 256)
+    tuner_a.record(halo.key, "aggregated", 4, 1e-3)
+    tuner_a.record(halo.key, "bulk", 1, 2e-3)
+    moe = tuner_a.decide_moe("model", 1, 512, 64, 8, 2, 128)
+    tuner_a.record(moe.key, "stream", 2, 1e-3)
+    tuner_a.record(moe.key, "bulk", 1, 3e-3)
+    tuner_a.decide_ckpt("mesh", 1, 1 << 20, 0.05, mtbf_s=120.0)
+    loop_a = make_loop((1, 1), str(tmp_path / "elastic"), 2, tuner_a)
+    loop_a.run(*loop_a.init_state(seed=0))
+
+    # phase 2 on (2, 2): restore the (1,1) checkpoint, replay winners
+    managed.clear_decision_log()
+    tuner_b = ScheduleTuner()
+    loop_b = make_loop((2, 2), str(tmp_path / "elastic"), 4, tuner_b)
+    params, opt, s0 = loop_b.resume_or_init(seed=0)
+    assert s0 == 2
+    ops = {r["op"]: r for r in loop_b.replayed}
+    assert {"halo_jacobi", "moe_dispatch", "ckpt_interval"} <= set(ops)
+    assert (ops["halo_jacobi"]["old_n"], ops["halo_jacobi"]["new_n"]) \
+        == (1, 2)
+    assert "data2" in ops["halo_jacobi"]["new_key"]
+    assert "model2" in ops["moe_dispatch"]["new_key"]
+    # winners carried onto the new-topology keys, unmeasured
+    new_halo = tuner_b.entries[ops["halo_jacobi"]["new_key"]]
+    assert (new_halo.mode, new_halo.chunks) == ("aggregated", 4)
+    assert new_halo.measured_s == {}
+    new_moe = tuner_b.entries[ops["moe_dispatch"]["new_key"]]
+    assert (new_moe.mode, new_moe.chunks) == ("stream", 2)
+    # the replay is visible in the decision trail
+    logged = {rec.op for rec in managed.decision_log()}
+    assert {"halo_aggregation", "moe_dispatch", "ckpt_interval"} <= logged
+
+    out_b = loop_b.run(params, opt, s0)
+    assert out_b["step"] == 4
+    for (k1, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(out_ref["params"])[0],
+            jax.tree_util.tree_flatten_with_path(out_b["params"])[0]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=1e-5,
+                                   err_msg=f"elastic trainloop {k1}")

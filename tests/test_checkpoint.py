@@ -1,0 +1,128 @@
+"""Checkpoint subsystem: atomicity across crashes, directory hygiene,
+async-writer error surfacing, ml_dtypes round-trips, corrupt-shard
+fallback, and the metered async drain."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step, restore,
+                              restore_latest, save, valid_steps)
+from repro.core.faults import corrupt_latest
+
+
+def _tree(seed=0, n=64):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(n, 8)).astype(np.float32),
+            "b": rng.normal(size=(8,)).astype(np.float32)}
+
+
+def test_crash_mid_save_never_corrupts_latest(tmp_path):
+    """A crash between staging and commit leaves only a ``.tmp`` dir (or a
+    partial step dir); latest_step must keep trusting the previous
+    committed checkpoint."""
+    d = str(tmp_path)
+    save(d, 2, _tree(), extra={"step": 2})
+    # crash A: staging dir never replaced
+    tmp = os.path.join(d, "step_00000004.tmp")
+    os.makedirs(tmp)
+    with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+        f.write(b"partial")
+    # crash B: a step dir missing its manifest (pre-atomic-commit layout)
+    part = os.path.join(d, "step_00000006")
+    os.makedirs(part)
+    with open(os.path.join(part, "arrays.npz"), "wb") as f:
+        f.write(b"partial")
+    assert latest_step(d) == 2
+    tree, extra, step = restore_latest(d, _tree())
+    assert step == 2 and extra["step"] == 2
+    np.testing.assert_array_equal(tree["w"], _tree()["w"])
+
+
+def test_gc_removes_stale_tmp_dirs(tmp_path):
+    d = str(tmp_path)
+    stale = os.path.join(d, "step_00000001.tmp")
+    os.makedirs(stale)
+    mgr = CheckpointManager(d, keep=1)
+    mgr.save_async(2, _tree(), extra={"step": 2})
+    mgr.wait()
+    mgr.save_async(4, _tree(), extra={"step": 4})
+    mgr.wait()
+    assert not os.path.exists(stale), "stale .tmp dir survived GC"
+    assert valid_steps(d) == [4], "keep=1 retention failed"
+
+
+def test_wait_surfaces_writer_error(tmp_path):
+    """The async writer's exception must surface on wait(), not vanish
+    with the thread."""
+    blocker = tmp_path / "ckpt"
+    blocker.write_text("not a directory")
+    mgr = CheckpointManager(str(blocker))
+    mgr.save_async(1, _tree())
+    with pytest.raises(Exception):
+        mgr.wait()
+    # the error queue drains: a second wait is clean
+    mgr.wait()
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "float8_e4m3fn"])
+def test_narrow_dtype_roundtrip(tmp_path, dtype):
+    """npz can't hold ml_dtypes: the manifest records the true dtype and
+    restore narrows back — bit-exact, since f32 superset both."""
+    d = str(tmp_path)
+    x = jnp.asarray(np.linspace(-2, 2, 32, dtype=np.float32)).astype(dtype)
+    tree = {"x": x, "y": np.arange(4, dtype=np.int32)}
+    save(d, 1, tree)
+    with open(os.path.join(d, "step_00000001", "manifest.json")) as f:
+        manifest = json.load(f)
+    assert {k["key"]: k["dtype"] for k in manifest["keys"]}["x"] == dtype
+    out, _ = restore(d, 1, tree)
+    assert str(out["x"].dtype) == dtype
+    np.testing.assert_array_equal(np.asarray(out["x"], np.float32),
+                                  np.asarray(x, np.float32))
+    np.testing.assert_array_equal(out["y"], tree["y"])
+
+
+def test_restore_latest_falls_back_past_corrupt_shard(tmp_path):
+    """A truncated arrays.npz passes the directory check but fails the
+    load: restore_latest must quarantine it and fall back to the previous
+    step (the corrupt@k fault's recovery path)."""
+    d = str(tmp_path)
+    save(d, 2, _tree(2), extra={"step": 2})
+    save(d, 4, _tree(4), extra={"step": 4})
+    assert corrupt_latest(d, keep_bytes=16) is not None
+    assert latest_step(d) == 4          # damage is invisible until load
+    tree, extra, step = restore_latest(d, _tree())
+    assert step == 2 and extra["step"] == 2
+    np.testing.assert_array_equal(tree["w"], _tree(2)["w"])
+    assert os.path.exists(os.path.join(d, "step_00000004.corrupt"))
+    assert latest_step(d) == 2          # quarantined, never retried
+
+
+def test_async_chunked_drain_roundtrip_and_metrics(tmp_path):
+    """A tiny drain chunk forces the multi-piece D2H path; the write must
+    still restore exactly, and the save's counters must land in
+    CheckpointMetrics (the cadence decision's inputs)."""
+    d = str(tmp_path)
+    rng = np.random.default_rng(7)
+    tree = {"big": jax.device_put(rng.normal(size=(256, 32))
+                                  .astype(np.float32)),
+            "small": jax.device_put(np.float32(3.5))}
+    mgr = CheckpointManager(d, drain_chunk_bytes=1024)   # 8 rows per chunk
+    mgr.save_async(3, tree, extra={"step": 3})
+    mgr.wait()
+    out, extra, step = restore_latest(d, jax.tree.map(np.asarray, tree))
+    assert step == 3
+    np.testing.assert_array_equal(out["big"], np.asarray(tree["big"]))
+    np.testing.assert_array_equal(out["small"], np.asarray(tree["small"]))
+    m = mgr.metrics
+    assert len(m.saves) == 1
+    rec = m.saves[0]
+    assert rec.nbytes == 256 * 32 * 4 + 4
+    assert rec.snapshot_s > 0 and rec.drain_s > 0 and rec.write_s > 0
+    assert m.write_bw_estimate() > 0
+    assert m.ckpt_cost_s_estimate() > 0
