@@ -21,6 +21,17 @@ echo "$serve_out" | grep -q "tok/s" || {
 echo "$serve_out" | grep -q "decision serve_schedule(" || {
     echo "FAIL: serve smoke missing the serve_schedule decision"; exit 1; }
 
+echo "== overload smoke (SLO admission + cost-model-chosen preemption) =="
+overload_out="$(python -m repro.launch.serve --arch mamba2-130m --reduced \
+    --schedule continuous --chunk 8 --preempt auto \
+    --fault-plan 'burst@2:16' --pages 12 --prompt-len 24 --new-tokens 16 \
+    --max-seq 64 --requests 6 --max-queue 12)"
+echo "$overload_out" | head -8
+echo "$overload_out" | grep -q "overload: sheds" || {
+    echo "FAIL: overload smoke produced no overload summary line"; exit 1; }
+echo "$overload_out" | grep -q "decision preempt_policy(" || {
+    echo "FAIL: overload smoke missing the preempt_policy decision"; exit 1; }
+
 echo "== pipeline smoke (managed 1F1B/interleaved training, --pipeline auto) =="
 pipe_out="$(XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m repro.launch.train --arch granite-34b --reduced --steps 2 \
@@ -112,6 +123,19 @@ echo "$out" | grep -q "moe_dispatch_tpu_v5e_.*_chosen" || {
     echo "FAIL: moe dispatch model rows missing"; exit 1; }
 echo "$out" | grep -q "moe_dispatch_decision_.*trail=moe_dispatch" || {
     echo "FAIL: moe dispatch decision trail entry missing"; exit 1; }
+# Overload smoke: the bursty-trace comparison must have run (seed commit
+# admission livelocks and is caught; managed watermark admission +
+# preemption completes with outputs token-equal to the FIFO baseline and
+# at least matches its SLO-goodput) and the decision trail must contain
+# the chosen preemption policy.
+echo "$out" | grep -q "overload_seed_commit,.*livelock caught" || {
+    echo "FAIL: seed-admission livelock row missing"; exit 1; }
+echo "$out" | grep -q "overload_fifo_goodput," || {
+    echo "FAIL: no-preemption FIFO goodput row missing"; exit 1; }
+echo "$out" | grep -q "overload_managed_goodput,.*tokens==fifo" || {
+    echo "FAIL: managed overload goodput row missing"; exit 1; }
+echo "$out" | grep -q "overload_decision_.*trail=preempt_policy" || {
+    echo "FAIL: preemption decision trail entry missing"; exit 1; }
 # Fault-tolerance smoke: the goodput comparison must have run (managed
 # Young/Daly cadence vs the fixed-25 baseline under the same injected
 # fault) and the decision trail must contain the chosen interval.

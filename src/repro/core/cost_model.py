@@ -973,6 +973,120 @@ def decide_serve_schedule(n_params: float, batch_slots: int,
 
 
 # ---------------------------------------------------------------------------
+# Preemption decision (swap vs drop-and-recompute vs head-of-line wait)
+# ---------------------------------------------------------------------------
+#
+# Optimistic admission's backstop: when the page pool exhausts mid-decode
+# the engine must free pages, and the central trade is pure data
+# movement — exactly the kind of choice MDMP manages:
+#
+#   swap       — D2H the victim's page chain (row-sliced chunks metered
+#                by overlap.drain_chunk_bytes so the transfer never
+#                stalls the step stream past its budget), H2D it back on
+#                re-admission.  Cost: 2 * KV bytes over the PCIe
+#                bandwidth (measured from prior swaps when available)
+#                plus per-chunk alpha.
+#   recompute  — release the pages and rebuild the victim as a
+#                prompt+generated continuation (the drain() idiom): the
+#                KV is re-earned by prefill-replay FLOPs, 2*N per
+#                replayed token.  No host memory, no transfer; wins for
+#                small models / short progress, loses once the resident
+#                KV is cheaper to move than to recompute.
+#   wait       — evict nobody: stall the growing slot for a quantum and
+#                let retirements free pages naturally.  Priced from the
+#                instrumented queue statistics (the soonest-finishing
+#                other slot's remaining steps at the measured step
+#                time); infinite when every slot is stalled.
+#
+# The chosen policy lands in the decision trail as
+# DecisionRecord(op="preempt_policy") via managed.resolve_preempt, is
+# persisted by tuner.decide_preempt, and is re-resolved online from
+# serve/metrics.py's measured step seconds and swap bandwidth.
+
+
+#: default D2H/H2D bandwidth for KV swap traffic before any transfer has
+#: been measured; on-model for a PCIe gen4 x16 host link
+PCIE_BW = 1.6e10
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptDecision:
+    """Outcome of the preemption-policy decision for one overload event."""
+    policy: str                    # "swap" | "recompute" | "wait"
+    victim_pages: int
+    swap_bytes: int                # KV bytes resident in the victim chain
+    chunk_bytes: int               # metered D2H slice size
+    pcie_bw: float                 # bytes/s (measured or default)
+    replay_tokens: int
+    times: dict[str, float]        # policy -> predicted seconds
+    recompute_s: float             # the unmanaged drop-everything baseline
+    chosen_s: float
+
+    @property
+    def predicted_speedup(self) -> float:
+        """Modeled gain over always-drop-and-recompute (the naive
+        baseline a scheduler without a cost model would ship)."""
+        return max(self.recompute_s, 1e-12) / max(self.chosen_s, 1e-12)
+
+
+def decide_preempt(victim_pages: int, page_bytes: int,
+                   replay_tokens: int, n_params: float, *,
+                   step_s: float | None = None,
+                   batch_slots: int = 1, dtype_bytes: int = 2,
+                   pcie_bw: float | None = None,
+                   chunk_bytes: int | None = None,
+                   wait_s: float | None = None,
+                   allow_swap: bool = True,
+                   hw: HardwareModel = DEFAULT_HW,
+                   force_policy: str | None = None) -> PreemptDecision:
+    """Pick the preemption policy for one pool-exhaustion event.
+
+    ``victim_pages``/``page_bytes`` size the swap transfer (both
+    directions), ``replay_tokens`` the prefill-replay FLOPs, ``wait_s``
+    the instrumented head-of-line estimate (None = nothing will free —
+    waiting can't help).  ``chunk_bytes`` is the metered D2H slice
+    (overlap.drain_chunk_bytes); when absent the same budget formula is
+    applied to the step time.  ``allow_swap=False`` removes swap from
+    the candidate set (slot-indexed SSM state isn't pageable).
+    ``force_policy`` pins the choice (an MDMPConfig override or the
+    tuner's measured winner) while still reporting the modeled table."""
+    bw = float(pcie_bw) if pcie_bw else PCIE_BW
+    step = (float(step_s) if step_s is not None else
+            serve_step_time(n_params, batch_slots,
+                            dtype_bytes=dtype_bytes, hw=hw))
+    swap_bytes = int(victim_pages) * int(page_bytes)
+    if chunk_bytes is None:
+        # overlap.drain_chunk_bytes' budget formula, inlined to keep the
+        # cost model import-cycle-free (budget=0.1 of one step)
+        chunk_bytes = max(1 << 16, min(1 << 27, int(0.1 * step * bw)))
+    chunk_bytes = max(1, int(chunk_bytes))
+    n_chunks = max(1, math.ceil(max(1, swap_bytes) / chunk_bytes))
+    times = {
+        "swap": (2.0 * swap_bytes / bw + 2.0 * n_chunks * hw.alpha_s
+                 if allow_swap else math.inf),
+        "recompute": 2.0 * max(0, replay_tokens) * max(n_params, 1.0)
+        / hw.peak_flops,
+        "wait": float(wait_s) if wait_s is not None else math.inf,
+    }
+    recompute_s = times["recompute"]
+    if force_policy is not None:
+        assert force_policy in times, force_policy
+        policy = force_policy
+    else:
+        policy = min(times, key=lambda p: (times[p], p))
+    chosen = times[policy]
+    if not math.isfinite(chosen):
+        # a pinned-but-impossible policy (swap on SSM state, wait with
+        # nothing retiring) degrades to the always-possible rebuild
+        policy, chosen = "recompute", recompute_s
+    return PreemptDecision(
+        policy=policy, victim_pages=int(victim_pages),
+        swap_bytes=swap_bytes, chunk_bytes=chunk_bytes, pcie_bw=bw,
+        replay_tokens=int(replay_tokens), times=times,
+        recompute_s=recompute_s, chosen_s=chosen)
+
+
+# ---------------------------------------------------------------------------
 # MoE dispatch decision (bulk a2a vs chunked-stream vs dense-fallback,
 # plus the capacity factor itself)
 # ---------------------------------------------------------------------------

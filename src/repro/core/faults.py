@@ -25,9 +25,17 @@ Kinds (the taxonomy, EXPERIMENTS.md §Fault-tolerance):
   replica_death@q    serving: the replica dies before quantum q
                      (``ReplicaDeath``); in-flight requests are drained
                      and re-admitted to survivors
+  burst@q:n          serving OVERLOAD: n synthetic requests arrive at
+                     quantum q (deterministic prompts seeded from q), so
+                     admission-control/shedding runs under test
+  pool_squeeze@q:f   serving OVERLOAD: the usable KV page pool shrinks
+                     to fraction f at quantum q (a co-tenant claiming
+                     HBM), so the preemption backstop runs under test
 
 Spec grammar:  ``kind@step[:arg]`` joined by ``;`` or ``,`` — e.g.
-``"transient@6;slow@9:0.5;corrupt@14"``.
+``"transient@6;slow@9:0.5;corrupt@14"``.  The overload kinds are
+deterministic by construction: same plan + seed => identical shed/
+preempt/decision sequences (asserted in tests/test_overload.py).
 """
 
 from __future__ import annotations
@@ -50,7 +58,8 @@ class ReplicaDeath(FaultError):
     """A serving replica died; drain + re-admit its in-flight requests."""
 
 
-KINDS = ("transient", "rank_death", "slow", "corrupt", "replica_death")
+KINDS = ("transient", "rank_death", "slow", "corrupt", "replica_death",
+         "burst", "pool_squeeze")
 
 
 @dataclasses.dataclass
@@ -129,6 +138,20 @@ class FaultPlan:
         if ev is not None:
             raise ReplicaDeath(
                 f"injected replica death before quantum {quantum_idx}")
+
+    def serve_overload(self, quantum_idx: int) -> list[FaultEvent]:
+        """Overload events due at this quantum boundary (each fired
+        exactly once, in plan order): ``burst`` events the engine turns
+        into synthetic submissions, ``pool_squeeze`` into a
+        ``PageTable.squeeze``.  Raises nothing — overload degrades
+        service, it doesn't kill the replica."""
+        out = []
+        for kind in ("burst", "pool_squeeze"):
+            ev = self.fire(kind, quantum_idx)
+            while ev is not None:
+                out.append(ev)
+                ev = self.fire(kind, quantum_idx)
+        return out
 
 
 def corrupt_latest(ckpt_dir: str, *, keep_bytes: int = 16) -> str | None:

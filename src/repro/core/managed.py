@@ -990,6 +990,54 @@ def resolve_serve_schedule(axis_name: str, batch_slots: int,
     return decision
 
 
+def resolve_preempt(axis_name: str, victim_pages: int, page_bytes: int,
+                    replay_tokens: int, n_params: float, *,
+                    batch_slots: int = 1, dtype_bytes: int = 2,
+                    measured_step_s: float | None = None,
+                    measured_pcie_bw: float | None = None,
+                    chunk_bytes: int | None = None,
+                    wait_s: float | None = None,
+                    allow_swap: bool = True,
+                    mode: str | None = None,
+                    policy: str | None = None
+                    ) -> cost_model.PreemptDecision:
+    """The managed-runtime entry for the serving preemption knob (swap a
+    victim's KV pages to host vs drop-and-recompute its prefill vs
+    head-of-line wait) — the overload analogue of
+    ``resolve_serve_schedule``.  Called by the engine on every
+    pool-exhaustion event with the victim's geometry and the instrumented
+    queue statistics; the chosen policy drives the eviction and lands in
+    the decision log.
+
+    ``mode='bulk'`` pins drop-and-recompute (the unmanaged baseline — no
+    host state, every eviction re-earns its KV by replay);
+    ``mode='interleaved'`` pins swap (the chunk-metered transfer path);
+    an explicit ``policy`` (the tuner's measured winner or a
+    ``--preempt`` pin) wins over the ambient mode.  Measured step
+    seconds and swap bandwidth from ``serve/metrics.py`` override the
+    modeled terms — the iteration-(k)->(k+1) correction.  The
+    DecisionRecord reuses ``chunks`` to carry the victim's page count
+    and the predicted fields to carry recompute-vs-chosen seconds."""
+    cfg = get_config()
+    eff_mode = mode or cfg.mode
+    force = policy if policy is not None else \
+        {"bulk": "recompute", "interleaved": "swap"}.get(eff_mode)
+    decision = cost_model.decide_preempt(
+        victim_pages, page_bytes, replay_tokens, n_params,
+        step_s=measured_step_s, batch_slots=batch_slots,
+        dtype_bytes=dtype_bytes, pcie_bw=measured_pcie_bw,
+        chunk_bytes=chunk_bytes, wait_s=wait_s, allow_swap=allow_swap,
+        hw=cfg.hw, force_policy=force)
+    if cfg.log_decisions:
+        _DECISION_LOG.append(DecisionRecord(
+            op="preempt_policy", axis=axis_name,
+            nbytes=decision.swap_bytes,
+            mode=decision.policy, chunks=decision.victim_pages,
+            predicted_bulk_s=decision.recompute_s,
+            predicted_interleaved_s=decision.chosen_s))
+    return decision
+
+
 def resolve_checkpoint(axis_name: str, step_s: float, snapshot_bytes: int,
                        *, mtbf_s: float = 1800.0,
                        measured_write_bw: float | None = None,

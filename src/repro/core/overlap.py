@@ -186,7 +186,13 @@ def drain_chunk_bytes(step_s: float, write_bw: float, *,
     — the same alpha-beta reasoning as the collective chunking, applied
     to recovery traffic.  A whole-tree blocking device_get is the
     ``budget=inf`` bulk baseline (what save_async did before the drain
-    was managed); tiny chunks pay per-transfer latency, the dual knob."""
+    was managed); tiny chunks pay per-transfer latency, the dual knob.
+
+    The serving preemption path reuses this meter for KV page swaps:
+    a preempted request's page chain drains to host (and restores back)
+    in chunks of this size, so eviction traffic never stalls the decode
+    stream for more than ``budget`` of a step either (serve/engine.py,
+    cost_model.decide_preempt prices the same chunking's alpha cost)."""
     want = int(max(0.0, budget) * max(step_s, 1e-6) * max(write_bw, 1.0))
     return max(min_bytes, min(max_bytes, want))
 

@@ -199,13 +199,22 @@ class CommRegion:
 
     def serve(self, label: str, *, axis: str, batch_slots: int,
               mean_prompt: int, mean_new: int, n_params: int, dtype,
-              max_prompt: int | None = None) -> None:
+              max_prompt: int | None = None,
+              page_bytes: int | None = None,
+              mean_pages: int = 1) -> None:
         """Declare a serving call site (the engine's step loop over
         ``batch_slots`` decode slots).  Planning runs the serve-schedule
         decision for it: the resulting PlanEntry's ``mode`` is the chosen
         batching mode ("static" | "continuous") and ``chunks`` the
         scheduling quantum C, read back via ``plan.mode_for(label)`` /
-        ``plan.chunks_for(label)`` and fed to ``serve/scheduler.py``."""
+        ``plan.chunks_for(label)`` and fed to ``serve/scheduler.py``.
+
+        When ``page_bytes`` is given (per-KV-page bytes across layers)
+        the overload backstop is declared too: an extra
+        ``{label}.preempt`` spec whose planned ``mode`` is the preempt
+        policy ("swap" | "recompute" | "wait") the engine should start
+        from when the page pool exhausts, priced for a mean victim of
+        ``mean_pages`` pages holding ``mean_prompt`` replayable tokens."""
         import numpy as np
         ib = np.dtype(dtype).itemsize
         self._specs.append(CommSpec(
@@ -214,6 +223,14 @@ class CommRegion:
             shape=(int(batch_slots), int(mean_prompt), int(mean_new),
                    int(max_prompt if max_prompt is not None
                        else mean_prompt), int(n_params), int(ib))))
+        if page_bytes is not None:
+            self._specs.append(CommSpec(
+                label=f"{label}.preempt", kind="preempt", axis=axis,
+                nbytes=int(mean_pages) * int(page_bytes),
+                collective="preempt",
+                shape=(int(batch_slots), int(page_bytes),
+                       int(mean_pages), int(mean_prompt), int(n_params),
+                       int(ib))))
 
     def checkpoint(self, label: str, *, axis: str, snapshot_bytes: int,
                    step_s: float, mtbf_s: float = 1800.0,
@@ -353,6 +370,24 @@ class CommRegion:
                     predicted_bulk_s=1.0 / max(d.static_tok_s, 1e-30),
                     predicted_interleaved_s=1.0 / max(d.chosen_tok_s,
                                                       1e-30))
+                continue
+            if spec.kind == "preempt":
+                # The overload backstop knob: swap-to-host vs drop-and-
+                # recompute vs head-of-line wait, routed through the
+                # managed runtime so the eviction policy lands in the
+                # MDMP decision log next to the serve schedule it backs.
+                (batch_slots, page_bytes, mean_pages, mean_prompt,
+                 n_params, ib) = spec.shape
+                with managed.use_config(self.config):
+                    d = managed.resolve_preempt(
+                        spec.axis, mean_pages, page_bytes, mean_prompt,
+                        n_params, batch_slots=batch_slots,
+                        dtype_bytes=ib)
+                entries[spec.label] = PlanEntry(
+                    spec=spec, mode=d.policy, chunks=1,
+                    overlap_budget=1.0,
+                    predicted_bulk_s=d.recompute_s,
+                    predicted_interleaved_s=d.chosen_s)
                 continue
             budget = (report.overlap_budget(spec.label)
                       if spec.label in report.records else 1.0)

@@ -80,6 +80,11 @@ class ScheduleTuner:
     MOE_CANDIDATES = (("bulk", 1), ("stream", 2), ("stream", 4),
                       ("dense", 1))
 
+    #: candidate policies for preemption call sites — ``mode`` carries
+    #: the policy (swap KV to host / drop-and-recompute / head-of-line
+    #: wait), ``chunks`` is unused (always 1)
+    PREEMPT_CANDIDATES = (("recompute", 1), ("swap", 1), ("wait", 1))
+
     #: candidate (mode, N) variants for checkpoint-cadence call sites —
     #: ``mode`` carries fixed/daly, ``chunks`` the interval in steps
     #: (fixed:25 is the unmanaged baseline every prior PR shipped)
@@ -237,6 +242,34 @@ class ScheduleTuner:
             self._entries[key] = entry
         return entry
 
+    def decide_preempt(self, axis: str, batch_slots: int, page_bytes: int,
+                       n_params: int, *, victim_pages: int = 1,
+                       replay_tokens: int = 0,
+                       dtype_str: str = "bfloat16", dtype_bytes: int = 2,
+                       step_s: float | None = None) -> TunerEntry:
+        """Policy decision for a serving preemption call site: seeded
+        from the swap-vs-recompute-vs-wait cost model (``mode`` carries
+        the policy), then overridden by measured eviction costs fed back
+        through ``record(key, "swap", 1, seconds)`` — and re-resolved
+        online per event from serve/metrics.py's measured step seconds
+        and swap bandwidth through ``managed.resolve_preempt``.  The key
+        is per serving SITE (slots, page bytes, params), not per event —
+        victim geometry varies every exhaustion, so it parameterises the
+        resolve, not the cache."""
+        key = call_site_key(
+            "preempt", (batch_slots, int(page_bytes), int(n_params)),
+            dtype_str, axis, batch_slots)
+        entry = self._entries.get(key)
+        if entry is None:
+            d = cost_model.decide_preempt(
+                victim_pages, page_bytes, replay_tokens, n_params,
+                step_s=step_s, batch_slots=batch_slots,
+                dtype_bytes=dtype_bytes, hw=self.hw)
+            entry = TunerEntry(key=key, mode=d.policy, chunks=1,
+                               predicted_s=d.chosen_s)
+            self._entries[key] = entry
+        return entry
+
     def decide_ckpt(self, axis: str, axis_size: int, snapshot_bytes: int,
                     step_s: float, *, mtbf_s: float = 1800.0,
                     write_bw: float | None = None,
@@ -290,6 +323,8 @@ class ScheduleTuner:
         candidates = (self.HALO_CANDIDATES if key.startswith("halo")
                       else self.ATTENTION_CANDIDATES
                       if key.startswith("attention")
+                      else self.PREEMPT_CANDIDATES
+                      if key.startswith("preempt")
                       else self.SERVE_CANDIDATES
                       if key.startswith("serve")
                       else self.PIPELINE_CANDIDATES
@@ -442,6 +477,15 @@ def replan_for_mesh(tuner: ScheduleTuner, new_axis_sizes: dict[str, int],
                 dtype_bytes=ib, schedule=old.mode, chunk=old.chunks)
             entry = tuner.decide_serve(slots, mp, mn, n_params,
                                        dtype_str=dtype, dtype_bytes=ib)
+        elif op == "preempt" and len(shape) == 3:
+            slots, page_bytes, n_params = shape
+            slots = int(new_axis_sizes.get(axis, slots))
+            managed.resolve_preempt(
+                axis, 1, page_bytes, 0, float(n_params),
+                batch_slots=slots, dtype_bytes=ib, policy=old.mode)
+            entry = tuner.decide_preempt(axis, slots, page_bytes,
+                                         n_params, dtype_str=dtype,
+                                         dtype_bytes=ib)
         elif op == "ckpt_interval" and len(shape) == 1:
             managed.resolve_checkpoint(
                 axis, step_s, shape[0], mtbf_s=mtbf_s,

@@ -10,6 +10,13 @@ cost model and correct it online from the measured step latencies.  The
 decision trail (DecisionRecord op="serve_schedule") is printed at the
 end.  Prompt lengths are MIXED by default (--prompt-len down to
 --min-prompt-len) — the workload where continuous batching pays.
+
+Overload robustness knobs: ``--pages`` under-provisions the KV page pool
+so optimistic admission needs its preemption backstop (``--preempt``
+swap / recompute / auto — every pool-exhaustion event prints as a
+``preempt_policy`` decision); ``--slo-ttft`` / ``--max-queue`` turn on
+SLO shedding and queue backpressure; ``--fault-plan 'burst@3:16'``
+injects a deterministic arrival flood (see core/faults.py).
 """
 
 from __future__ import annotations
@@ -22,9 +29,11 @@ import numpy as np
 
 from repro import configs
 from repro.core import managed
+from repro.core.faults import FaultPlan
 from repro.models.model import Model
 from repro.parallel.sharding import MeshCtx, infer_shardings
 from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import RequestRejected
 
 
 def main() -> None:
@@ -38,10 +47,22 @@ def main() -> None:
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--pages", type=int, default=None,
+                    help="page-pool size (default slots*max_seq worth; "
+                    "smaller values exercise the preemption backstop)")
     ap.add_argument("--schedule", default="auto",
                     choices=("static", "continuous", "auto"))
     ap.add_argument("--chunk", type=int, default=None,
                     help="pin the scheduling quantum C")
+    ap.add_argument("--preempt", default="auto",
+                    choices=("swap", "recompute", "auto"),
+                    help="pool-exhaustion policy (auto = cost model)")
+    ap.add_argument("--slo-ttft", type=float, default=None,
+                    help="TTFT SLO in seconds (estimates beyond it shed)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="pending-queue bound (backpressure shedding)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="e.g. 'burst@3:16;pool_squeeze@5:0.5'")
     ap.add_argument("--mdmp-mode", default="auto")
     args = ap.parse_args()
 
@@ -55,20 +76,34 @@ def main() -> None:
         model.init(jax.random.key(0)),
         infer_shardings(model.param_specs(), mesh))
 
+    plan = (FaultPlan.parse(args.fault_plan) if args.fault_plan
+            else None)
     engine = ServeEngine(model, mesh, params, slots=args.slots,
                          max_seq=args.max_seq, page_size=args.page_size,
-                         schedule=args.schedule, chunk=args.chunk)
+                         n_pages=args.pages, schedule=args.schedule,
+                         chunk=args.chunk, fault_plan=plan,
+                         preempt=args.preempt,
+                         slo_ttft_s=args.slo_ttft,
+                         max_queue=args.max_queue)
     rng = np.random.default_rng(0)
     lo = min(args.min_prompt_len, args.prompt_len)
     plens = rng.integers(lo, args.prompt_len + 1, size=args.requests)
-    rids = [engine.submit(
-        rng.integers(0, cfg.vocab_size - 1, size=int(p)).astype(np.int32),
-        args.new_tokens) for p in plens]
+    rids = []
+    for p in plens:
+        prompt = rng.integers(0, cfg.vocab_size - 1,
+                              size=int(p)).astype(np.int32)
+        try:
+            rids.append(engine.submit(prompt, args.new_tokens))
+        except RequestRejected as e:          # shed at the door
+            print(f"shed: {e}")
+            rids.append(None)
 
     t0 = time.perf_counter()
     out = engine.run()
     dt = time.perf_counter() - t0
-    total = int(sum(plens)) + args.requests * args.new_tokens
+    served = sum(len(v) for v in out.values())
+    total = int(sum(int(plens[i]) for i, r in enumerate(rids)
+                    if r is not None)) + served
     s = engine.metrics.summary()
     print(f"{total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s end-to-end; "
           f"{s['useful_tok_s']:.1f} useful tok/s, occupancy "
@@ -77,13 +112,27 @@ def main() -> None:
           f"{s['mean_tpot_s'] * 1e3:.2f}ms  quanta {s['quanta']}  "
           f"pages high-water {engine.pt.high_water}/"
           f"{engine.cache_cfg.n_pages}")
+    print(f"overload: sheds {s['sheds']}  preempts {s['preempts']}  "
+          f"swap {s['swap_bytes']} B  p99 TTFT "
+          f"{s['p99_ttft_s'] * 1e3:.1f}ms")
+    if args.slo_ttft is not None:
+        met = engine.metrics.slo_met_tokens(args.slo_ttft)
+        print(f"SLO-goodput: {met} tokens within "
+              f"{args.slo_ttft * 1e3:.0f}ms TTFT "
+              f"({met / dt:.1f} tok/s)")
     for rec in managed.decision_log():
         if rec.op == "serve_schedule":
             print(f"decision serve_schedule({rec.mode}, C={rec.chunks}) "
                   f"pred static={rec.predicted_bulk_s * 1e6:.1f}us/tok "
                   f"chosen={rec.predicted_interleaved_s * 1e6:.1f}us/tok")
+        elif rec.op == "preempt_policy":
+            print(f"decision preempt_policy({rec.mode}, "
+                  f"pages={rec.chunks}, {rec.nbytes} B) "
+                  f"pred recompute={rec.predicted_bulk_s * 1e3:.2f}ms "
+                  f"chosen={rec.predicted_interleaved_s * 1e3:.2f}ms")
     for i, r in enumerate(rids[:4]):
-        print(f"  req{i} (P={int(plens[i])}): {out[r].tolist()}")
+        if r is not None and r in out:
+            print(f"  req{i} (P={int(plens[i])}): {out[r].tolist()}")
 
 
 if __name__ == "__main__":

@@ -9,11 +9,21 @@ slot-steps did useful work, and the per-request traces record TTFT/TPOT.
 them back into ``cost_model.decide_serve_schedule`` (via
 ``managed.resolve_serve_schedule(measured_*)``) to correct the modeled
 roofline terms online.
+
+The overload path adds three more instruments, all feeding the preempt/
+shed decisions the same way: ``sheds`` (typed admission rejections and
+their reasons), ``preempts`` (the victim/policy sequence — the
+determinism tests compare it across runs), and ``swaps`` (measured D2H/
+H2D bytes and seconds, whose ratio is the MEASURED PCIe bandwidth
+``swap_bw_estimate`` that re-prices the swap-vs-recompute decision).
+``p99_ttft_s`` / ``slo_met_tokens`` are the robustness headline numbers
+(benchmarks/measured.py::bench_overload).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 
 
@@ -41,6 +51,10 @@ class ServeMetrics:
         self._t0 = time.perf_counter()
         self.quanta: list[QuantumRecord] = []
         self.traces: dict[int, RequestTrace] = {}
+        self.sheds: list[tuple[int, str]] = []      # (rid, reason)
+        self.preempts: list[tuple[int, str]] = []   # (rid, policy)
+        self.swap_bytes = 0
+        self.swap_s = 0.0
 
     def now(self) -> float:
         return time.perf_counter() - self._t0
@@ -61,6 +75,21 @@ class ServeMetrics:
 
     def on_done(self, rid: int) -> None:
         self.traces[rid].done_s = self.now()
+
+    def on_shed(self, rid: int, reason: str) -> None:
+        """An admission rejection (queue_full / slo / infeasible)."""
+        self.sheds.append((rid, reason))
+
+    def on_preempt(self, rid: int, policy: str) -> None:
+        """A preemption event — the (victim, policy) sequence is the
+        determinism contract of the overload fault kinds."""
+        self.preempts.append((rid, policy))
+
+    def note_swap(self, nbytes: int, seconds: float) -> None:
+        """One swap transfer leg (D2H or H2D) — accumulates the measured
+        PCIe bandwidth that re-prices decide_preempt online."""
+        self.swap_bytes += int(nbytes)
+        self.swap_s += float(seconds)
 
     def note_quantum(self, wall_s: float, chunk: int, useful_steps: int,
                      slots: int) -> None:
@@ -94,6 +123,13 @@ class ServeMetrics:
                       for q in self.quanta)
         return rest[len(rest) // 2]
 
+    def swap_bw_estimate(self) -> float | None:
+        """Measured swap bandwidth (bytes/s over all transfer legs) —
+        the PCIe term of the swap-vs-recompute decision, measured."""
+        if self.swap_bytes <= 0 or self.swap_s <= 0:
+            return None
+        return self.swap_bytes / self.swap_s
+
     # -- aggregates ----------------------------------------------------------
 
     def useful_tokens_per_s(self, since: int = 0) -> float:
@@ -116,6 +152,12 @@ class ServeMetrics:
         return [t.first_token_s - t.submit_s for t in self.traces.values()
                 if t.first_token_s is not None]
 
+    def p99_ttft_s(self) -> float:
+        xs = sorted(self.ttft_s())
+        if not xs:
+            return 0.0
+        return xs[min(len(xs) - 1, max(0, math.ceil(0.99 * len(xs)) - 1))]
+
     def tpot_s(self) -> list[float]:
         out = []
         for t in self.traces.values():
@@ -125,6 +167,16 @@ class ServeMetrics:
                            / (t.generated - 1))
         return out
 
+    def slo_met_tokens(self, slo_ttft_s: float) -> int:
+        """Tokens generated by COMPLETED requests whose TTFT met the SLO
+        — the numerator of SLO-goodput (met tokens / wall second)."""
+        tot = 0
+        for t in self.traces.values():
+            if t.done_s is not None and t.first_token_s is not None \
+                    and (t.first_token_s - t.submit_s) <= slo_ttft_s:
+                tot += t.generated
+        return tot
+
     def summary(self) -> dict:
         ttft = self.ttft_s()
         tpot = self.tpot_s()
@@ -133,7 +185,11 @@ class ServeMetrics:
             "useful_tok_s": self.useful_tokens_per_s(),
             "occupancy": self.occupancy(),
             "mean_ttft_s": sum(ttft) / len(ttft) if ttft else 0.0,
+            "p99_ttft_s": self.p99_ttft_s(),
             "mean_tpot_s": sum(tpot) / len(tpot) if tpot else 0.0,
             "step_s": self.step_s_estimate() or 0.0,
             "dispatch_s": self.dispatch_s_estimate() or 0.0,
+            "sheds": len(self.sheds),
+            "preempts": len(self.preempts),
+            "swap_bytes": self.swap_bytes,
         }
