@@ -55,6 +55,32 @@ echo "$moe_out" | grep -q "decision moe_dispatch(" || {
 echo "$moe_out" | grep -q "loss" || {
     echo "FAIL: moe smoke produced no training losses"; exit 1; }
 
+echo "== planner smoke (whole-program comm plan, --plan auto, pipelined) =="
+plan_out="$(XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m repro.launch.train --arch granite-34b --reduced --steps 2 \
+    --pipeline auto --plan auto --mesh 2x2x2 --batch 8 --seq 32 \
+    --ckpt /tmp/mdmp_ci_plan_ckpt)"
+echo "$plan_out" | head -8
+echo "$plan_out" | grep -q "decision program_plan(" || {
+    echo "FAIL: planner smoke missing the program_plan decision"; exit 1; }
+echo "$plan_out" | grep -q "  trail  " || {
+    echo "FAIL: planner smoke missing the per-op coordinated trail"
+    exit 1; }
+echo "$plan_out" | grep -q "loss" || {
+    echo "FAIL: planner smoke produced no training losses"; exit 1; }
+
+echo "== planner smoke (whole-program comm plan, --plan auto, MoE) =="
+plan_moe_out="$(XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m repro.launch.train --arch moonshot-v1-16b-a3b --reduced \
+    --steps 2 --moe-dispatch auto --plan auto --mesh 2x2 --batch 8 \
+    --seq 32 --ckpt /tmp/mdmp_ci_plan_moe_ckpt)"
+echo "$plan_moe_out" | head -8
+echo "$plan_moe_out" | grep -q "decision program_plan(" || {
+    echo "FAIL: MoE planner smoke missing the program_plan decision"
+    exit 1; }
+echo "$plan_moe_out" | grep -q "loss" || {
+    echo "FAIL: MoE planner smoke produced no training losses"; exit 1; }
+
 echo "== fault smoke (managed cadence + deterministic fault injection) =="
 rm -rf /tmp/mdmp_ci_fault_ckpt
 fault_out="$(python -m repro.launch.train --arch granite-34b --reduced \
@@ -145,6 +171,15 @@ echo "$out" | grep -q "faults_goodput_managed,.*vs fixed25" || {
     echo "FAIL: managed-cadence goodput row missing"; exit 1; }
 echo "$out" | grep -q "ckpt_decision_.*trail=ckpt_interval" || {
     echo "FAIL: checkpoint cadence decision trail entry missing"; exit 1; }
+# Program-plan smoke: the contending two-region config must have run with
+# both resolutions (program-plan outputs asserted allclose to the local
+# oracle in-suite) and the coordinated trail row must be present.
+echo "$out" | grep -q "plan_conflict_local," || {
+    echo "FAIL: local-resolution conflict row missing"; exit 1; }
+echo "$out" | grep -q "plan_conflict_program,.*allclose=local" || {
+    echo "FAIL: program-plan conflict row missing"; exit 1; }
+echo "$out" | grep -q "plan_conflict_decision,.*trail=program_plan(coordinated" || {
+    echo "FAIL: program-plan decision trail entry missing"; exit 1; }
 echo "$out" | grep -q "measured_suite,0.00,ERROR" && {
     echo "FAIL: measured suite subprocess errored"; exit 1; }
 echo "CI OK"

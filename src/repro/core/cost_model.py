@@ -1491,3 +1491,75 @@ def roofline(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
         memory_s=hlo_bytes / (n_chips * hw.hbm_bw),
         collective_s=collective_bytes / (n_chips * hw.link_bw),
     )
+
+
+# ---------------------------------------------------------------------------
+# Joint-plan components (used by plan/planner.py — the MDMP compiler)
+# ---------------------------------------------------------------------------
+#
+# The per-subsystem decide_* functions above price each knob ALONE on the
+# link with a private overlap budget.  The whole-program planner instead
+# needs each knob candidate decomposed into the terms it must pool across
+# ops sharing a mesh axis: the bytes-on-link time (serialised within a
+# contention set), the message count (alpha each, never hidden), the
+# adjacent compute an interleaved schedule can hide the wire under (one
+# account per contention set — compute hides the link once, not once per
+# op), and the buffer footprint drawn from the pooled stash cap.
+
+
+@dataclasses.dataclass(frozen=True)
+class CommComponents:
+    """Wire/message/hide decomposition of one knob candidate."""
+    wire_s: float          # bytes-on-link seconds (no alphas)
+    msgs: int              # message count (alpha_s each)
+    hide_s: float          # compute available to hide wire_s (0 for bulk)
+    stash_bytes: int = 0   # buffer footprint against the pooled cap
+
+    def solo_s(self, alpha: float) -> float:
+        """The LOCAL model of this knob: alone on the link, private hide
+        budget — what per-subsystem resolution implicitly assumes."""
+        return max(0.0, self.wire_s - self.hide_s) + alpha * self.msgs
+
+
+def collective_wire_s(collective: str, nbytes: float, n: int,
+                      hw: HardwareModel = DEFAULT_HW) -> float:
+    """Bytes-on-link seconds of one ring collective — the alpha-free term
+    of the ring_*_time primitives above (AG: shard bytes in; RS/A2A: full/
+    local bytes in; AR = RS + AG of the shard)."""
+    if n <= 1:
+        return 0.0
+    if collective == "all_gather":
+        return (n - 1) * nbytes / hw.link_bw
+    if collective in ("reduce_scatter", "all_to_all"):
+        return (n - 1) * (nbytes / n) / hw.link_bw
+    if collective == "all_reduce":
+        return 2.0 * (n - 1) * (nbytes / n) / hw.link_bw
+    raise ValueError(f"unknown collective {collective!r}")
+
+
+def collective_msgs(collective: str, n: int, *, mode: str = "bulk",
+                    chunks: int = 1) -> int:
+    """Message (dispatch) count of one collective knob.  A BULK collective
+    is ONE fused op (the XLA all_gather / psum / all_to_all the managed
+    runtime falls through to — one dispatch regardless of n); the
+    interleaved ring issues one ppermute per step, ``(n-1) * chunks`` of
+    them (doubled for all_reduce's RS+AG rings).  This asymmetry is the
+    planner's lever: streaming buys overlap at per-message cost, bulk
+    minimises messages — the paper's aggregation counter-knob."""
+    if n <= 1:
+        return 0
+    if mode != "interleaved":
+        return 1
+    steps = (n - 1) * max(1, chunks)
+    return 2 * steps if collective == "all_reduce" else steps
+
+
+def collective_components(collective: str, nbytes: float, n: int, *,
+                          mode: str = "bulk", chunks: int = 1,
+                          compute_time_s: float = 0.0,
+                          hw: HardwareModel = DEFAULT_HW) -> CommComponents:
+    """CommComponents of one generic managed-collective knob candidate."""
+    return CommComponents(
+        wire_s=collective_wire_s(collective, nbytes, n, hw),
+        msgs=collective_msgs(collective, n, mode=mode, chunks=chunks),
+        hide_s=compute_time_s if mode == "interleaved" else 0.0)

@@ -53,10 +53,30 @@ class AccessRecord:
         return self.first_read_depth / total_depth
 
 
+#: jaxpr primitives that move bytes across a mesh axis.  ``psum`` carries
+#: its axes under ``axes`` (names, unlike reduce_sum's int dims); the rest
+#: under ``axis_name`` (a bare name or a tuple of names).
+COLLECTIVE_PRIMS = {"psum", "all_gather", "all_to_all", "ppermute",
+                    "reduce_scatter", "psum_scatter"}
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveRecord:
+    """One collective equation extracted from the region's jaxpr — the
+    planner needs the mesh axis and the payload bytes to serialise link
+    contention across ops sharing that axis."""
+    primitive: str                 # jaxpr primitive name ("psum", ...)
+    axis: str                      # mesh axis the bytes cross
+    nbytes: int                    # payload bytes (sum of array operands)
+    depth: int                     # program depth of the equation
+
+
 @dataclasses.dataclass
 class RegionReport:
     records: dict[str, AccessRecord]
     total_eqns: int
+    collectives: list[CollectiveRecord] = dataclasses.field(
+        default_factory=list)
 
     def overlap_budget(self, label: str) -> float:
         """Fraction of the region's equations available to overlap the
@@ -67,11 +87,29 @@ class RegionReport:
             return 1.0 - rec.readiness(self.total_eqns)
         return rec.consumption_slack(self.total_eqns)
 
+    def collective_bytes_by_axis(self) -> dict[str, int]:
+        """Total extracted payload bytes per mesh axis."""
+        out: dict[str, int] = {}
+        for c in self.collectives:
+            out[c.axis] = out.get(c.axis, 0) + c.nbytes
+        return out
+
+
+def _collective_axes(eqn) -> tuple[str, ...]:
+    """Mesh axis names of one collective eqn (normalised to a tuple)."""
+    ax = eqn.params.get("axis_name", eqn.params.get("axes", ()))
+    if isinstance(ax, str):
+        return (ax,)
+    return tuple(a for a in ax if isinstance(a, str))
+
 
 def _walk(jaxpr: jcore.Jaxpr, tracked: dict[Any, str],
-          records: dict[str, AccessRecord], depth0: int) -> int:
+          records: dict[str, AccessRecord], depth0: int,
+          collectives: list[CollectiveRecord] | None = None) -> int:
     """Walk eqns, propagating tracked vars through aliasing ops; returns the
-    depth after this jaxpr."""
+    depth after this jaxpr.  When ``collectives`` is given, every collective
+    eqn (psum / all_gather / all_to_all / ppermute / reduce_scatter) is
+    recorded with its mesh axis name and payload bytes."""
     depth = depth0
     alias_prims = {"convert_element_type", "reshape", "transpose",
                    "squeeze", "broadcast_in_dim", "copy", "pjit",
@@ -82,6 +120,17 @@ def _walk(jaxpr: jcore.Jaxpr, tracked: dict[Any, str],
 
     for eqn in jaxpr.eqns:
         depth += 1
+        if collectives is not None and \
+                eqn.primitive.name in COLLECTIVE_PRIMS:
+            nbytes = sum(
+                int(v.aval.size) * v.aval.dtype.itemsize
+                for v in eqn.invars
+                if not isinstance(v, jcore.Literal)
+                and getattr(v.aval, "shape", None) is not None)
+            for ax in _collective_axes(eqn):
+                collectives.append(CollectiveRecord(
+                    primitive=eqn.primitive.name, axis=ax,
+                    nbytes=nbytes, depth=depth))
         # (sub-jaxpr, outer operands aligned to its constvars + invars).
         # while's two jaxprs bind DIFFERENT operand subsets (cond_consts +
         # carry vs body_consts + carry); cond's first invar is the branch
@@ -146,9 +195,12 @@ def _walk(jaxpr: jcore.Jaxpr, tracked: dict[Any, str],
                     continue
                 if outer_v in tracked:
                     inner_tracked[inner_v] = tracked[outer_v]
-            if inner_tracked:
+            # collective extraction must see EVERY sub-jaxpr (a shard_map
+            # body's collectives exist whether or not a tracked operand
+            # threads into it); access tracking still needs inner binders.
+            if inner_tracked or collectives is not None:
                 depth = _walk(sub, {**tracked, **inner_tracked}, records,
-                              depth)
+                              depth, collectives)
     return depth
 
 
@@ -257,5 +309,7 @@ def analyze_region(fn: Callable, *example_args: Any,
         tracked[flat_invars[i]] = label
         records[label] = AccessRecord(label=label)
 
-    total = _walk(jaxpr, tracked, records, 0)
-    return RegionReport(records=records, total_eqns=total)
+    collectives: list[CollectiveRecord] = []
+    total = _walk(jaxpr, tracked, records, 0, collectives)
+    return RegionReport(records=records, total_eqns=total,
+                        collectives=collectives)

@@ -97,7 +97,33 @@ class DecisionRecord:
     predicted_interleaved_s: float
 
 
+#: Every DecisionRecord ``op`` the managed runtime may emit — ONE registry
+#: so the program planner, the trail printers, and the CI greps can
+#: enumerate them instead of guessing free strings.  Subsystem resolvers
+#: first, then the generic managed-collective call sites, then the joint
+#: planner's summary record.
+DECISION_OPS = frozenset({
+    # subsystem resolvers (resolve_*)
+    "halo_aggregation", "attention_schedule", "pipeline_schedule",
+    "serve_schedule", "preempt_policy", "ckpt_interval", "moe_dispatch",
+    # generic managed collectives (_resolve call sites)
+    "all_gather", "reduce_scatter", "all_reduce", "all_to_all",
+    "all_gather_matmul", "all_gather_matmul_multi", "gram_ag_ring",
+    "matmul_reduce_scatter", "ring_attention", "expert_stream",
+    # the whole-program planner (plan/planner.py) summary record
+    "program_plan",
+})
+
 _DECISION_LOG: list[DecisionRecord] = []
+
+
+def log_decision(rec: DecisionRecord) -> None:
+    """Append to the audit trail, enforcing the op-name registry (a typo'd
+    op would silently escape every trail grep and the planner's lowering)."""
+    assert rec.op in DECISION_OPS, (
+        f"unregistered DecisionRecord op {rec.op!r}; add it to "
+        f"managed.DECISION_OPS")
+    _DECISION_LOG.append(rec)
 
 
 def decision_log() -> list[DecisionRecord]:
@@ -106,6 +132,56 @@ def decision_log() -> list[DecisionRecord]:
 
 def clear_decision_log() -> None:
     _DECISION_LOG.clear()
+
+
+# ---------------------------------------------------------------------------
+# Program-plan override (the MDMP compiler's hook into every resolver)
+# ---------------------------------------------------------------------------
+#
+# plan/planner.py emits a ProgramPlan whose knobs must win over each
+# subsystem's LOCAL resolution.  The plan is installed on the same
+# thread-local as MDMPConfig and consulted by every resolve_* entry point
+# and by _resolve for the generic collectives.  Precedence, most-binding
+# first: explicit caller knob (schedule=/k=/n_micro=/chunks=...) >
+# program-plan knob > ambient mode (cfg.mode / ctx.mdmp_mode "auto") >
+# cost-model auto.  The plan object is duck-typed (anything with
+# ``knob_for(op, axis) -> dict | None``) so this module never imports
+# plan/ (no import cycle).
+
+
+def install_plan(plan: Any | None) -> None:
+    """Install (or clear, with None) the active ProgramPlan for this
+    thread.  Planner-chosen knobs win over local resolution wherever the
+    caller did not pin an explicit knob."""
+    _STATE.plan = plan
+
+
+def active_plan() -> Any | None:
+    return getattr(_STATE, "plan", None)
+
+
+class use_plan:
+    """``with managed.use_plan(program_plan): ...`` — scoped install."""
+
+    def __init__(self, plan: Any | None):
+        self._new = plan
+
+    def __enter__(self) -> Any | None:
+        self._old = getattr(_STATE, "plan", None)
+        _STATE.plan = self._new
+        return self._new
+
+    def __exit__(self, *exc: Any) -> None:
+        _STATE.plan = self._old
+
+
+def _plan_knob(op: str, axis_name: str) -> dict | None:
+    """The active plan's knob for (op, axis), or None when no plan is
+    installed / the plan has no opinion on this call site."""
+    plan = active_plan()
+    if plan is None:
+        return None
+    return plan.knob_for(op, axis_name)
 
 
 # ---------------------------------------------------------------------------
@@ -126,6 +202,12 @@ def _resolve(op: str, axis_name: str, x: Array, mode: str | None,
              compute_time_s: float = 0.0) -> tuple[str, int]:
     """Resolve mode/chunks for a call site and log the decision."""
     cfg = get_config()
+    pk = _plan_knob(op, axis_name)
+    if pk is not None and mode in (None, "auto") and chunks is None:
+        # the program plan binds this call site; an explicit caller
+        # mode/chunks would have pinned the knob above it
+        mode = pk.get("mode") or mode
+        chunks = pk.get("chunks")
     mode = mode or cfg.mode
     n = _axis_size(axis_name)
     decision = cost_model.decide(
@@ -136,7 +218,7 @@ def _resolve(op: str, axis_name: str, x: Array, mode: str | None,
         cfg.chunks if cfg.chunks is not None else decision.chunks)
     eff_mode = decision.mode if mode == "auto" else mode
     if cfg.log_decisions:
-        _DECISION_LOG.append(DecisionRecord(
+        log_decision(DecisionRecord(
             op=op, axis=axis_name, nbytes=_nbytes(x), mode=eff_mode,
             chunks=eff_chunks,
             predicted_bulk_s=decision.bulk_time_s,
@@ -163,13 +245,16 @@ def resolve_halo_aggregation(axis_name: str, axis_size: int,
     to carry k and the predicted fields to carry seconds-per-sweep.
     """
     cfg = get_config()
+    pk_plan = _plan_knob("halo_aggregation", axis_name)
+    if pk_plan is not None and mode in (None, "auto") and k is None:
+        k = pk_plan.get("chunks")
     eff_mode = mode or cfg.mode
     force_k = 1 if eff_mode == "bulk" else k
     decision = cost_model.decide_halo_aggregation(
         rows_local, cols, axis_size, dtype_bytes=dtype_bytes, hw=cfg.hw,
         candidate_k=candidate_k, force_k=force_k)
     if cfg.log_decisions:
-        _DECISION_LOG.append(DecisionRecord(
+        log_decision(DecisionRecord(
             op="halo_aggregation", axis=axis_name,
             nbytes=2 * decision.k * cols * dtype_bytes,
             mode=decision.mode, chunks=decision.k,
@@ -877,6 +962,9 @@ def resolve_attention_schedule(axis_name: str, axis_size: int, batch: int,
     ``schedule`` pins an explicit choice (the tuner's measured winner).
     """
     cfg = get_config()
+    pk = _plan_knob("attention_schedule", axis_name)
+    if pk is not None and schedule is None and mode in (None, "auto"):
+        schedule = pk.get("mode")
     eff_mode = mode or cfg.mode
     force = {"bulk": "bulk", "interleaved": "ring"}.get(eff_mode, schedule)
     decision = cost_model.decide_attention_schedule(
@@ -884,7 +972,7 @@ def resolve_attention_schedule(axis_name: str, axis_size: int, batch: int,
         dtype_bytes=dtype_bytes, causal=causal, hw=cfg.hw,
         force_schedule=force)
     if cfg.log_decisions:
-        _DECISION_LOG.append(DecisionRecord(
+        log_decision(DecisionRecord(
             op="attention_schedule", axis=axis_name,
             nbytes=2 * batch * s_local * kv_heads * head_dim * dtype_bytes,
             mode=decision.schedule, chunks=max(1, axis_size),
@@ -922,6 +1010,13 @@ def resolve_pipeline_schedule(axis_name: str, axis_size: int,
     hide the handoff bytes.  The DecisionRecord reuses ``chunks`` to
     carry the microbatch count M."""
     cfg = get_config()
+    pk = _plan_knob("pipeline_schedule", axis_name)
+    if pk is not None and schedule is None and n_micro is None and \
+            mode in (None, "auto"):
+        schedule = pk.get("mode")
+        n_micro = pk.get("chunks")
+        if virtual is None:
+            virtual = pk.get("virtual")
     eff_mode = mode or cfg.mode
     # an EXPLICIT schedule wins over the ambient mode (same precedence as
     # cfg.attn_impl vs mdmp_mode): mode only maps to a schedule when none
@@ -936,7 +1031,7 @@ def resolve_pipeline_schedule(axis_name: str, axis_size: int,
         overlap_budget=overlap_budget, force_schedule=force,
         force_micro=n_micro, force_virtual=virtual)
     if cfg.log_decisions:
-        _DECISION_LOG.append(DecisionRecord(
+        log_decision(DecisionRecord(
             op="pipeline_schedule", axis=axis_name,
             nbytes=int(batch_bytes / max(1, decision.n_micro)),
             mode=decision.schedule, chunks=decision.n_micro,
@@ -970,6 +1065,11 @@ def resolve_serve_schedule(axis_name: str, batch_slots: int,
     iteration-(k)->(k+1) correction.  The DecisionRecord reuses ``chunks``
     to carry C and the predicted fields to carry seconds-per-token."""
     cfg = get_config()
+    pk = _plan_knob("serve_schedule", axis_name)
+    if pk is not None and schedule is None and chunk is None and \
+            mode in (None, "auto"):
+        schedule = pk.get("mode")
+        chunk = pk.get("chunks")
     eff_mode = mode or cfg.mode
     force = {"bulk": "static", "interleaved": "continuous"}.get(eff_mode,
                                                                 schedule)
@@ -980,7 +1080,7 @@ def resolve_serve_schedule(axis_name: str, batch_slots: int,
         measured_dispatch_s=measured_dispatch_s,
         ttft_budget_s=ttft_budget_s, force_mode=force, force_chunk=chunk)
     if cfg.log_decisions:
-        _DECISION_LOG.append(DecisionRecord(
+        log_decision(DecisionRecord(
             op="serve_schedule", axis=axis_name,
             nbytes=int(n_params) * dtype_bytes,
             mode=decision.mode, chunks=decision.chunk,
@@ -1019,6 +1119,9 @@ def resolve_preempt(axis_name: str, victim_pages: int, page_bytes: int,
     DecisionRecord reuses ``chunks`` to carry the victim's page count
     and the predicted fields to carry recompute-vs-chosen seconds."""
     cfg = get_config()
+    pk = _plan_knob("preempt_policy", axis_name)
+    if pk is not None and policy is None and mode in (None, "auto"):
+        policy = pk.get("mode")
     eff_mode = mode or cfg.mode
     force = policy if policy is not None else \
         {"bulk": "recompute", "interleaved": "swap"}.get(eff_mode)
@@ -1029,7 +1132,7 @@ def resolve_preempt(axis_name: str, victim_pages: int, page_bytes: int,
         chunk_bytes=chunk_bytes, wait_s=wait_s, allow_swap=allow_swap,
         hw=cfg.hw, force_policy=force)
     if cfg.log_decisions:
-        _DECISION_LOG.append(DecisionRecord(
+        log_decision(DecisionRecord(
             op="preempt_policy", axis=axis_name,
             nbytes=decision.swap_bytes,
             mode=decision.policy, chunks=decision.victim_pages,
@@ -1060,6 +1163,9 @@ def resolve_checkpoint(axis_name: str, step_s: float, snapshot_bytes: int,
     and the predicted fields to carry overhead fractions (fixed vs
     chosen)."""
     cfg = get_config()
+    pk = _plan_knob("ckpt_interval", axis_name)
+    if pk is not None and interval is None and mode in (None, "auto"):
+        interval = pk.get("chunks")
     eff_mode = mode or cfg.mode
     force = interval if interval is not None else (
         cost_model.CKPT_FIXED_INTERVAL if eff_mode == "bulk" else None)
@@ -1069,7 +1175,7 @@ def resolve_checkpoint(axis_name: str, step_s: float, snapshot_bytes: int,
         ckpt_cost_s=measured_ckpt_cost_s,
         restore_s=measured_restore_s, hw=cfg.hw, force_interval=force)
     if cfg.log_decisions:
-        _DECISION_LOG.append(DecisionRecord(
+        log_decision(DecisionRecord(
             op="ckpt_interval", axis=axis_name,
             nbytes=int(snapshot_bytes),
             mode=decision.mode, chunks=decision.interval,
@@ -1184,6 +1290,13 @@ def resolve_moe_dispatch(axis_name: str, axis_size: int, tokens_local: int,
     cfg.moe.dispatch) wins over the ambient mode.  The DecisionRecord
     reuses ``chunks`` to carry the stream chunk count g."""
     cfg = get_config()
+    pk = _plan_knob("moe_dispatch", axis_name)
+    if pk is not None and schedule is None and g is None and \
+            mode in (None, "auto"):
+        schedule = pk.get("mode")
+        g = pk.get("chunks")
+        if capacity_factor_override is None:
+            capacity_factor_override = pk.get("capacity_factor")
     eff_mode = mode or cfg.mode
     force = schedule if schedule is not None else \
         {"bulk": "bulk", "interleaved": "stream"}.get(eff_mode)
@@ -1197,7 +1310,7 @@ def resolve_moe_dispatch(axis_name: str, axis_size: int, tokens_local: int,
         force_schedule=force, force_g=g,
         force_capacity_factor=capacity_factor_override)
     if cfg.log_decisions:
-        _DECISION_LOG.append(DecisionRecord(
+        log_decision(DecisionRecord(
             op="moe_dispatch", axis=axis_name, nbytes=decision.a2a_bytes,
             mode=decision.schedule, chunks=decision.g,
             predicted_bulk_s=decision.bulk_s,

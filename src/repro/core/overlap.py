@@ -21,6 +21,7 @@ psum fallback for replicated (non-FSDP) parameters, and a bucketing helper
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Sequence
 
 import jax
@@ -33,6 +34,32 @@ from repro.core.managed import (get_config, managed_all_gather,
                                 managed_all_reduce, managed_reduce_scatter)
 
 Array = jax.Array
+
+
+@dataclasses.dataclass
+class OverlapAccount:
+    """A SINGLE pooled overlap budget, in seconds of hideable compute.
+
+    Per-subsystem resolution lets every op assume it can hide its wire
+    under the adjacent compute — but on one device the compute stream
+    hides the link ONCE, not once per op.  The whole-program planner
+    (plan/planner.py) opens one account per contention set (ops whose
+    readiness windows overlap on the same mesh axis), seeds it with the
+    LARGEST single hide the set's interleaved knobs offer, and draws every
+    op's wire from it; whatever doesn't fit is exposed serial link time."""
+    budget_s: float
+    drawn_s: float = 0.0
+
+    @property
+    def remaining_s(self) -> float:
+        return max(0.0, self.budget_s - self.drawn_s)
+
+    def draw(self, wire_s: float) -> float:
+        """Hide as much of ``wire_s`` as the account still covers; returns
+        the EXPOSED remainder (serial link seconds the step must pay)."""
+        hidden = min(max(0.0, wire_s), self.remaining_s)
+        self.drawn_s += hidden
+        return max(0.0, wire_s) - hidden
 
 
 def fsdp_gather(w_shard: Array, axis_name: str, *, axis: int = 0,

@@ -106,6 +106,7 @@ class CommRegion:
         self.config = config or get_config()
         self._specs: list[CommSpec] = []
         self._plan: Plan | None = None
+        self._report: instrument.RegionReport | None = None
 
     # -- declarations -------------------------------------------------------
 
@@ -263,6 +264,7 @@ class CommRegion:
         labels = [s.label for s in self._specs[:len(tracked_args)]]
         report = instrument.analyze_region(
             fn, *example_args, tracked_args=list(tracked_args), labels=labels)
+        self._report = report
 
         from repro.core import managed
 
@@ -411,3 +413,17 @@ class CommRegion:
     @property
     def last_plan(self) -> Plan | None:
         return self._plan
+
+    @property
+    def last_report(self) -> instrument.RegionReport | None:
+        """The instrumentation report of the last ``plan()`` — the
+        readiness windows and extracted collectives the whole-program
+        planner lowers against (plan/ir.lower_region)."""
+        return self._report
+
+    def lower(self):
+        """Lower this region's declarations to planner CommOps (plan/ir),
+        windows refined by the last ``plan()``'s instrumentation when
+        available.  Lazy import: core must not depend on plan/."""
+        from repro.plan.ir import lower_region
+        return lower_region(self, self._report)

@@ -91,11 +91,16 @@ class ScheduleTuner:
     CKPT_CANDIDATES = (("fixed", 25), ("daly", 4), ("daly", 10),
                        ("daly", 50))
 
+    #: reserved JSON key the program plans persist under — never a call
+    #: site (call_site_key always contains "|")
+    PROGRAM_PLANS_KEY = "__program_plans__"
+
     def __init__(self, hw: HardwareModel = TPU_V5E,
                  path: str | None = None):
         self.hw = hw
         self.path = path
         self._entries: dict[str, TunerEntry] = {}
+        self._program_plans: dict[str, dict] = {}
         if path and os.path.exists(path):
             self.load(path)
 
@@ -343,11 +348,42 @@ class ScheduleTuner:
                 return mode, chunks
         return None
 
+    # -- program plans (plan/planner.py output, keyed by program+topology) ---
+
+    @staticmethod
+    def program_plan_key(signature: str, topology: str) -> str:
+        return f"{signature}@{topology}"
+
+    def store_program_plan(self, plan) -> str:
+        """Persist a ``plan.planner.ProgramPlan`` keyed by (program
+        signature, topology) — the whole-program analogue of a call-site
+        entry.  Rides along in the same JSON cache / checkpoint."""
+        key = self.program_plan_key(plan.signature, plan.topology)
+        self._program_plans[key] = plan.to_dict()
+        return key
+
+    def get_program_plan(self, signature: str, topology: str):
+        """Return the stored ``ProgramPlan`` for this (program, topology),
+        or None.  Lazy import keeps core free of a plan dependency."""
+        d = self._program_plans.get(self.program_plan_key(signature,
+                                                          topology))
+        if d is None:
+            return None
+        from repro.plan.planner import ProgramPlan
+        return ProgramPlan.from_dict(d)
+
+    @property
+    def program_plans(self) -> dict[str, dict]:
+        return dict(self._program_plans)
+
     # -- persistence ---------------------------------------------------------
 
     def to_json(self) -> str:
-        return json.dumps({k: dataclasses.asdict(v)
-                           for k, v in self._entries.items()}, indent=2)
+        blob = {k: dataclasses.asdict(v)
+                for k, v in self._entries.items()}
+        if self._program_plans:
+            blob[self.PROGRAM_PLANS_KEY] = dict(self._program_plans)
+        return json.dumps(blob, indent=2)
 
     def save(self, path: str | None = None) -> None:
         path = path or self.path
@@ -363,8 +399,13 @@ class ScheduleTuner:
 
     def load_entries(self, raw: dict) -> None:
         """Install entries from a ``to_json``-shaped dict (e.g. the tuner
-        state a checkpoint carried along)."""
+        state a checkpoint carried along).  The reserved
+        ``__program_plans__`` key holds the persisted whole-program plans,
+        not a call-site entry."""
         for k, v in raw.items():
+            if k == self.PROGRAM_PLANS_KEY:
+                self._program_plans.update(v)
+                continue
             self._entries[k] = TunerEntry(**v)
 
     @property
@@ -500,4 +541,54 @@ def replan_for_mesh(tuner: ScheduleTuner, new_axis_sizes: dict[str, int],
                          "new_key": entry.key, "mode": old.mode,
                          "chunks": old.chunks, "old_n": n_old,
                          "new_n": n_new})
+
+    replayed.extend(replan_program_plans(tuner, new_axis_sizes))
     return replayed
+
+
+def replan_program_plans(tuner: ScheduleTuner,
+                         new_axis_sizes: dict[str, int]) -> list[dict]:
+    """Re-run the whole-program planner over every persisted ProgramPlan
+    on the NEW topology.  Each stored plan's CommOps are rebuilt with the
+    new axis extents and their per-rank payloads rescaled (total bytes
+    conserved, like the call-site replay above); the joint pass then
+    re-searches the knob space from scratch — a knob the old topology
+    forced off its local optimum may be free again on the new one.  The
+    fresh plan is stored under the new-topology key and one
+    ``program_plan`` record per re-plan is returned (and logged to the
+    decision trail by ``plan_program`` itself)."""
+    from repro.plan.ir import CommOp
+    from repro.plan.planner import plan_program
+
+    #: per-rank meta fields that shrink/grow with the shard count
+    local_fields = ("tokens_local", "s_local", "rows_local")
+
+    out: list[dict] = []
+    for old_key, d in sorted(tuner.program_plans.items()):
+        ops = [CommOp.from_dict(o) for o in d.get("ops", [])]
+        if not ops:
+            continue
+        changed = False
+        for op in ops:
+            n_old = max(1, op.axis_size)
+            n_new = int(new_axis_sizes.get(op.axis, n_old))
+            if n_new == n_old:
+                continue
+            changed = True
+            op.axis_size = n_new
+            op.nbytes = max(1, op.nbytes * n_old // n_new)
+            for f in local_fields:
+                if f in op.meta:
+                    op.meta[f] = max(1, int(op.meta[f]) * n_old // n_new)
+        plan = plan_program(ops, hw=tuner.hw,
+                            notes=[f"replanned from {old_key}"]
+                            if changed else [])
+        tuner.store_program_plan(plan)
+        out.append({"op": "program_plan", "axis": plan.topology,
+                    "old_key": old_key,
+                    "new_key": tuner.program_plan_key(plan.signature,
+                                                      plan.topology),
+                    "mode": "coordinated" if plan.coordinated else "local",
+                    "chunks": len(plan.choices),
+                    "old_n": 0, "new_n": 0})
+    return out

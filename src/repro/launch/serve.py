@@ -63,6 +63,12 @@ def main() -> None:
                     help="pending-queue bound (backpressure shedding)")
     ap.add_argument("--fault-plan", default=None,
                     help="e.g. 'burst@3:16;pool_squeeze@5:0.5'")
+    ap.add_argument("--plan", default="local",
+                    choices=("local", "program", "auto"),
+                    help="communication planning scope: 'program'/'auto' "
+                         "run the whole-program planner over the serving "
+                         "comm set (schedule + preempt knobs) and install "
+                         "the coordinated ProgramPlan before the run")
     ap.add_argument("--mdmp-mode", default="auto")
     args = ap.parse_args()
 
@@ -85,6 +91,49 @@ def main() -> None:
                          preempt=args.preempt,
                          slo_ttft_s=args.slo_ttft,
                          max_queue=args.max_queue)
+    if args.plan != "local":
+        # Whole-program pass over the serving comm set: the batching
+        # schedule and the preemption policy resolve jointly (one
+        # ProgramPlan, one trail) instead of knob-by-knob.
+        import jax.numpy as jnp
+        from repro.plan import CommOp, plan_program
+        n_params = float(cfg.param_count())
+        ib = int(jnp.dtype(cfg.dtype).itemsize)
+        lo0 = min(args.min_prompt_len, args.prompt_len)
+        mean_prompt = (lo0 + args.prompt_len) / 2.0
+        mean_pages = max(1, (args.prompt_len + args.new_tokens
+                             + args.page_size - 1) // args.page_size)
+        ops = [
+            CommOp(kind="serve", label="serve.schedule",
+                   op_name="serve_schedule", axis="serve",
+                   axis_size=args.slots,
+                   nbytes=int(n_params) * ib, dtype_bytes=ib,
+                   phase="serve",
+                   meta={"batch_slots": args.slots,
+                         "mean_prompt": mean_prompt,
+                         "mean_new": float(args.new_tokens),
+                         "max_prompt": float(args.prompt_len),
+                         "n_params": n_params}),
+            CommOp(kind="preempt", label="serve.preempt",
+                   op_name="preempt_policy", axis="serve",
+                   axis_size=args.slots,
+                   nbytes=int(engine._page_bytes), dtype_bytes=ib,
+                   phase="serve",
+                   meta={"batch_slots": args.slots,
+                         "page_bytes": int(engine._page_bytes),
+                         "mean_pages": mean_pages,
+                         "replay_tokens": args.prompt_len,
+                         "n_params": n_params}),
+        ]
+        prog = plan_program(ops, notes=[f"launch.serve {args.arch}"])
+        kind = "coordinated" if prog.coordinated else "local"
+        print(f"decision program_plan({kind} ops={len(prog.choices)} "
+              f"topo={prog.topology} "
+              f"local-concat={prog.local_solo_sum_s * 1e6:.1f}us "
+              f"joint={prog.joint_cost_s * 1e6:.1f}us)")
+        for line in prog.summary().splitlines()[1:]:
+            print(f"  trail{line}")
+        managed.install_plan(prog)
     rng = np.random.default_rng(0)
     lo = min(args.min_prompt_len, args.prompt_len)
     plens = rng.integers(lo, args.prompt_len + 1, size=args.requests)

@@ -44,6 +44,13 @@ def main() -> None:
                     choices=["bulk", "stream", "dense", "auto"],
                     help="MoE expert-dispatch schedule (auto = managed "
                          "cost-model decision, logged per layer)")
+    ap.add_argument("--plan", default="local",
+                    choices=["local", "program", "auto"],
+                    help="communication planning scope: 'local' keeps "
+                         "per-subsystem resolution; 'program'/'auto' run "
+                         "the whole-program planner (repro.plan) over the "
+                         "step's comm set and install the coordinated "
+                         "ProgramPlan before tracing")
     ap.add_argument("--mesh", default=None,
                     help="e.g. 2x4 (data x model) or 2x2x2 "
                          "(pod x data x model); default = all devices "
@@ -96,7 +103,62 @@ def main() -> None:
                           total_steps=args.steps,
                           moment_dtype=cfg.moment_dtype)
     from repro.core import managed as managed_lib
+    from repro.core.tuner import ScheduleTuner
     managed_lib.clear_decision_log()
+    tuner = ScheduleTuner()
+    if args.plan != "local":
+        # Whole-program pass: lower this step's communication set to
+        # comm-IR ops, price the JOINT schedule, and install the plan so
+        # every resolve_* call below prefers the coordinated knob.
+        import jax.numpy as jnp
+        from repro.plan import lower_train_ops, plan_program
+        hw = managed_lib.get_config().hw
+        ib = jnp.dtype(cfg.dtype).itemsize
+        gb, sl = args.batch, args.seq
+        b_loc = max(1, gb // max(1, ctx.dp))
+        attention = None
+        if getattr(cfg, "n_heads", 0) and ctx.tp > 1:
+            attention = {"batch": b_loc, "s_local": max(1, sl // ctx.tp),
+                         "heads": cfg.n_heads, "kv_heads": cfg.n_kv_heads,
+                         "head_dim": cfg.head_dim, "d_model": cfg.d_model,
+                         "causal": True, "dtype_bytes": ib}
+        moe_geom = None
+        if cfg.moe is not None and ctx.tp > 1:
+            moe_geom = {"tokens_local": b_loc * sl,
+                        "d_model": cfg.d_model,
+                        "n_experts": cfg.moe.n_experts,
+                        "top_k": cfg.moe.top_k,
+                        "d_ff_expert": cfg.moe.d_ff_expert,
+                        "capacity_factor": cfg.moe.capacity_factor,
+                        "mults": 3, "dtype_bytes": ib}
+        pipe_geom = None
+        if args.pipeline != "none":
+            # mirror build_train_step's cost-model inputs exactly
+            n_stage = ctx.pods
+            pipe_geom = {
+                "axis": "pod", "n_layers": cfg.n_layers,
+                "batch_fwd_s": (2.0 * cfg.param_count() / n_stage
+                                * (b_loc * sl) / hw.peak_flops),
+                "batch_bytes": (b_loc * (sl // max(1, ctx.tp))
+                                * cfg.d_model * ib),
+                "candidate_micro": tuple(
+                    m for m in (1, 2, 4, 8, 16, 32, 64)
+                    if b_loc % m == 0)}
+        ops = lower_train_ops(
+            mesh_axes=dict(ctx.axis_sizes),
+            grad_bytes=int(cfg.param_count()) * 4,
+            pipeline=pipe_geom, attention=attention, moe=moe_geom)
+        prog = plan_program(ops, hw=hw,
+                            notes=[f"launch.train {args.arch}"])
+        kind = "coordinated" if prog.coordinated else "local"
+        print(f"decision program_plan({kind} ops={len(prog.choices)} "
+              f"topo={prog.topology} "
+              f"local-concat={prog.local_solo_sum_s * 1e6:.1f}us "
+              f"joint={prog.joint_cost_s * 1e6:.1f}us)")
+        for line in prog.summary().splitlines()[1:]:
+            print(f"  trail{line}")
+        tuner.store_program_plan(prog)
+        managed_lib.install_plan(prog)
     step_fn, pshard, bshard = build_train_step(
         model, opt_cfg, mesh, compress_pod=args.compress_pod,
         pipeline=args.pipeline, pipe_microbatches=args.microbatches,
@@ -115,7 +177,6 @@ def main() -> None:
                   if args.ckpt_every in (None, "auto")
                   else int(args.ckpt_every))
     from repro.core.faults import FaultPlan
-    from repro.core.tuner import ScheduleTuner
     fault_plan = (FaultPlan.parse(args.fault_plan)
                   if args.fault_plan else None)
     loop = TrainLoop(step_fn, model, opt_cfg, data,
@@ -124,7 +185,7 @@ def main() -> None:
                                      ckpt_dir=args.ckpt,
                                      managed_cadence=managed_cadence,
                                      mtbf_s=args.mtbf),
-                     pshard, bshard, tuner=ScheduleTuner(),
+                     pshard, bshard, tuner=tuner,
                      fault_plan=fault_plan)
     params, opt, s0 = (loop.resume_or_init() if args.resume
                        else loop.init_state())

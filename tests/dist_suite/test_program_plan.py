@@ -1,0 +1,125 @@
+"""Program-plan conflict, EXECUTED on 8 devices: two declared regions
+contend on one mesh axis; the coordinated plan must (a) beat both the
+local picks under shared constraints and their concatenation in the
+model, and (b) leave the numerics BIT-IDENTICAL to the local-plan
+oracle — the backed-off knobs are movement-only (bulk vs ring), so
+coordination is free to apply."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import managed
+from repro.parallel.sharding import smap
+from repro.plan import CommOp, plan_program
+
+N = 8
+
+
+def _conflict_ops():
+    """Two movement-only collectives on one axis with overlapping
+    readiness windows.  Region A's compute (1ms) is the pooled overlap
+    donor; region B's own hide (0.1ms) makes streaming the LOCAL winner
+    for both — but under the shared account B's ring only adds dispatch
+    alphas, so the joint pass backs it off to bulk."""
+    bw = managed.get_config().hw.link_bw
+    nbytes_ag = int(5e-4 * bw / (N - 1))           # wire_A = 0.5 ms
+    nbytes_a2a = int(2e-4 * bw * N / (N - 1))      # wire_B = 0.2 ms
+    return [
+        CommOp(kind="all_gather", label="regionA.acts",
+               op_name="all_gather", axis="x", axis_size=N,
+               nbytes=nbytes_ag, dtype_bytes=4, phase="fwd",
+               window=(0.0, 0.6),
+               meta={"collective": "all_gather",
+                     "compute_time_s": 1e-3}),
+        CommOp(kind="all_to_all", label="regionB.tokens",
+               op_name="all_to_all", axis="x", axis_size=N,
+               nbytes=nbytes_a2a, dtype_bytes=4, phase="fwd",
+               window=(0.1, 0.7),
+               meta={"collective": "all_to_all",
+                     "compute_time_s": 1e-4}),
+    ]
+
+
+def _step(mesh, ag_mode=None, ag_chunks=None, a2a_mode=None):
+    """One program touching BOTH regions' collectives: a gather-matmul
+    on region A's operand, a token shuffle on region B's."""
+
+    def f(a, w, t):
+        g = managed.managed_all_gather(a, "x", ag_mode, ag_chunks)
+        y = jnp.tanh(g @ w)
+        z = managed.managed_all_to_all(t, "x", 0, 0, a2a_mode)
+        return y, z
+
+    return jax.jit(smap(f, mesh, in_specs=(P("x"), P(None), P("x")),
+                        out_specs=(P(None), P("x"))))
+
+
+def test_conflict_plan_beats_local_and_is_bit_equal(mesh8):
+    managed.clear_decision_log()
+    plan = plan_program(_conflict_ops())
+
+    # -- the modeled half: coordination is forced and strictly pays ----------
+    assert plan.coordinated, plan.summary()
+    assert plan.joint_cost_s < plan.local_joint_cost_s
+    assert plan.joint_cost_s < plan.local_solo_sum_s
+    ag = plan.knob_for("all_gather", "x")
+    a2a = plan.knob_for("all_to_all", "x")
+    # both stream locally; jointly the a2a backs off to ONE fused dispatch
+    choices = {c.op.op_name: c for c in plan.choices}
+    assert choices["all_gather"].local_knob["mode"] == "interleaved"
+    assert choices["all_to_all"].local_knob["mode"] == "interleaved"
+    assert ag["mode"] == "interleaved"
+    assert a2a["mode"] == "bulk"
+    summary = [r for r in managed.decision_log()
+               if r.op == "program_plan"]
+    assert len(summary) == 1 and summary[0].mode == "coordinated"
+
+    # -- the executed half: bit-equality across all three resolutions --------
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(N * 4, 6)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(6, 5)).astype(np.float32))
+    t = jnp.asarray(rng.normal(size=(N * 8, 4)).astype(np.float32))
+
+    def run(**kw):
+        y, z = _step(mesh8, **kw)(a, w, t)
+        return np.asarray(y), np.asarray(z)
+
+    y_local, z_local = run(ag_mode="interleaved", a2a_mode="interleaved")
+    with managed.use_plan(plan):
+        y_coord, z_coord = run()
+    y_amb, z_amb = run()
+
+    # coordinated == local oracle, bit for bit (movement-only knobs)
+    np.testing.assert_array_equal(y_coord, y_local)
+    np.testing.assert_array_equal(z_coord, z_local)
+    # and == the ambient (no plan) resolution too
+    np.testing.assert_array_equal(y_coord, y_amb)
+    np.testing.assert_array_equal(z_coord, z_amb)
+    managed.clear_decision_log()
+
+
+def test_installed_plan_drives_call_sites(mesh8):
+    """The executed trail proves the plan BOUND the call sites: under the
+    installed plan the all_gather resolves interleaved (the plan's knob),
+    the all_to_all bulk — neither pinned by the caller."""
+    plan = plan_program(_conflict_ops(), log=False)
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(N * 2, 4)).astype(np.float32))
+    t = jnp.asarray(rng.normal(size=(N * 8, 4)).astype(np.float32))
+
+    def f(x, y):
+        return (managed.managed_all_gather(x, "x"),
+                managed.managed_all_to_all(y, "x", 0, 0))
+
+    step = jax.jit(smap(f, mesh8, in_specs=(P("x"), P("x")),
+                        out_specs=(P(None), P("x"))))
+    managed.clear_decision_log()
+    with managed.use_plan(plan):
+        step(a, t)
+    modes = {r.op: r.mode for r in managed.decision_log()
+             if r.op in ("all_gather", "all_to_all")}
+    assert modes["all_gather"] == "interleaved"
+    assert modes["all_to_all"] == "bulk"
+    managed.clear_decision_log()
