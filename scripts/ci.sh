@@ -11,10 +11,50 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
+echo "== mdmplint gate (static communication verifier) =="
+# the live launch configs below must lint clean (exit 0, zero errors)...
+lint_pipe="$(python -m repro.launch.lint --target train \
+    --arch granite-34b --reduced --mesh 2x2x2 --pipeline 1f1b \
+    --batch 8 --seq 32)"
+echo "$lint_pipe" | grep -q "clean (0 diagnostics)" || {
+    echo "FAIL: pipelined train config does not lint clean"; exit 1; }
+lint_moe="$(python -m repro.launch.lint --target train \
+    --arch moonshot-v1-16b-a3b --reduced --mesh 2x2 --batch 8 --seq 32)"
+echo "$lint_moe" | grep -q "clean (0 diagnostics)" || {
+    echo "FAIL: MoE train config does not lint clean"; exit 1; }
+lint_serve="$(python -m repro.launch.lint --target serve \
+    --arch mamba2-130m --reduced --slots 2 --prompt-len 12 \
+    --new-tokens 8)"
+echo "$lint_serve" | grep -q "clean (0 diagnostics)" || {
+    echo "FAIL: serve config does not lint clean"; exit 1; }
+# ...while every deliberately-broken corpus case must yield EXACTLY its
+# golden diagnostic code and a non-zero exit
+lint_case() {  # $1 = corpus case, $2 = expected code
+    if out="$(python -m repro.launch.lint \
+            --case "tests/lint_corpus/$1" 2>&1)"; then
+        echo "FAIL: lint of broken corpus case $1 exited zero"; exit 1
+    fi
+    echo "$out" | grep -q "^$2 " || {
+        echo "FAIL: corpus case $1 missing $2 (got: $out)"; exit 1; }
+}
+lint_case unknown_axis.json MDMP001
+lint_case undeclared_collective.json MDMP101
+lint_case bytes_drift.json MDMP102
+lint_case nonbijective_permute.json MDMP201
+lint_case ring_no_return.json MDMP202
+lint_case wait_cycle.json MDMP301
+lint_case overlap_race.json MDMP401
+lint_case nondivisor_g.json MDMP501
+lint_case bad_microbatch.json MDMP502
+lint_case overcap_stash.json MDMP503
+python -m repro.launch.lint --case tests/lint_corpus/clean.json || {
+    echo "FAIL: clean corpus case did not lint clean"; exit 1; }
+echo "mdmplint gate OK"
+
 echo "== serve smoke (managed serving runtime, schedule=auto) =="
 serve_out="$(python -m repro.launch.serve --arch mamba2-130m --reduced \
     --schedule auto --requests 6 --slots 2 --new-tokens 8 --max-seq 64 \
-    --prompt-len 12)"
+    --prompt-len 12 --verify strict)"
 echo "$serve_out" | head -8
 echo "$serve_out" | grep -q "tok/s" || {
     echo "FAIL: serve smoke produced no throughput line"; exit 1; }
@@ -36,7 +76,7 @@ echo "== pipeline smoke (managed 1F1B/interleaved training, --pipeline auto) =="
 pipe_out="$(XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m repro.launch.train --arch granite-34b --reduced --steps 2 \
     --pipeline auto --mesh 2x2x2 --batch 8 --seq 32 \
-    --ckpt /tmp/mdmp_ci_pipe_ckpt)"
+    --verify strict --ckpt /tmp/mdmp_ci_pipe_ckpt)"
 echo "$pipe_out" | head -6
 echo "$pipe_out" | grep -q "decision pipeline_schedule(" || {
     echo "FAIL: pipeline smoke missing the pipeline_schedule decision"
@@ -48,7 +88,7 @@ echo "== moe smoke (managed expert dispatch, --moe-dispatch auto) =="
 moe_out="$(XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m repro.launch.train --arch moonshot-v1-16b-a3b --reduced \
     --steps 2 --moe-dispatch auto --mesh 2x2 --batch 8 --seq 32 \
-    --ckpt /tmp/mdmp_ci_moe_ckpt)"
+    --verify strict --ckpt /tmp/mdmp_ci_moe_ckpt)"
 echo "$moe_out" | head -6
 echo "$moe_out" | grep -q "decision moe_dispatch(" || {
     echo "FAIL: moe smoke missing the moe_dispatch decision"; exit 1; }

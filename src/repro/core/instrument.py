@@ -64,11 +64,17 @@ COLLECTIVE_PRIMS = {"psum", "all_gather", "all_to_all", "ppermute",
 class CollectiveRecord:
     """One collective equation extracted from the region's jaxpr — the
     planner needs the mesh axis and the payload bytes to serialise link
-    contention across ops sharing that axis."""
+    contention across ops sharing that axis.  ``trips`` is the static
+    trip count of the enclosing ``scan`` nest (a ppermute inside a ring
+    body executes ``length`` times per region run but is ONE logical
+    site); ``source`` is the user-code ``file:line`` the equation traces
+    to, for the static verifier's diagnostics."""
     primitive: str                 # jaxpr primitive name ("psum", ...)
     axis: str                      # mesh axis the bytes cross
     nbytes: int                    # payload bytes (sum of array operands)
     depth: int                     # program depth of the equation
+    trips: int = 1                 # executions per region run (scan nest)
+    source: str = ""               # user-frame "file:line" provenance
 
 
 @dataclasses.dataclass
@@ -88,10 +94,12 @@ class RegionReport:
         return rec.consumption_slack(self.total_eqns)
 
     def collective_bytes_by_axis(self) -> dict[str, int]:
-        """Total extracted payload bytes per mesh axis."""
+        """Total extracted payload bytes per mesh axis (one logical site
+        inside a scanned ring body contributes ``nbytes * trips`` — the
+        bytes a full region run actually moves)."""
         out: dict[str, int] = {}
         for c in self.collectives:
-            out[c.axis] = out.get(c.axis, 0) + c.nbytes
+            out[c.axis] = out.get(c.axis, 0) + c.nbytes * max(1, c.trips)
         return out
 
 
@@ -103,17 +111,43 @@ def _collective_axes(eqn) -> tuple[str, ...]:
     return tuple(a for a in ax if isinstance(a, str))
 
 
+def _source_of(eqn) -> str:
+    """Repo-relative ``file:line`` of the user frame this eqn traces to
+    (empty when source info is unavailable — e.g. synthetic jaxprs)."""
+    try:
+        from jax._src import source_info_util
+        frame = source_info_util.user_frame(eqn.source_info)
+        if frame is None:
+            return ""
+        fn = frame.file_name
+        for marker in ("src/repro/", "tests/", "benchmarks/", "examples/"):
+            i = fn.find(marker)
+            if i >= 0:
+                fn = fn[i:]
+                break
+        return f"{fn}:{frame.start_line}"
+    except Exception:
+        return ""
+
+
 def _walk(jaxpr: jcore.Jaxpr, tracked: dict[Any, str],
           records: dict[str, AccessRecord], depth0: int,
-          collectives: list[CollectiveRecord] | None = None) -> int:
+          collectives: list[CollectiveRecord] | None = None,
+          trips: int = 1) -> int:
     """Walk eqns, propagating tracked vars through aliasing ops; returns the
     depth after this jaxpr.  When ``collectives`` is given, every collective
     eqn (psum / all_gather / all_to_all / ppermute / reduce_scatter) is
-    recorded with its mesh axis name and payload bytes."""
+    recorded ONCE per logical site with its mesh axis name, payload bytes,
+    and ``trips`` — the product of enclosing static scan lengths (a ring
+    body's ppermute runs ``length`` times per region execution)."""
     depth = depth0
     alias_prims = {"convert_element_type", "reshape", "transpose",
                    "squeeze", "broadcast_in_dim", "copy", "pjit",
-                   "custom_jvp_call", "custom_vjp_call", "remat", "checkpoint"}
+                   "custom_jvp_call", "custom_vjp_call", "remat",
+                   "checkpoint",
+                   # jax >= 0.4 names the staged-out custom-derivative
+                   # call sites *_jaxpr; the fwd body rides in fun_jaxpr
+                   "custom_jvp_call_jaxpr", "custom_vjp_call_jaxpr"}
     def _raw(p):
         return p.jaxpr if isinstance(p, jcore.ClosedJaxpr) else (
             p if isinstance(p, jcore.Jaxpr) else None)
@@ -130,12 +164,18 @@ def _walk(jaxpr: jcore.Jaxpr, tracked: dict[Any, str],
             for ax in _collective_axes(eqn):
                 collectives.append(CollectiveRecord(
                     primitive=eqn.primitive.name, axis=ax,
-                    nbytes=nbytes, depth=depth))
-        # (sub-jaxpr, outer operands aligned to its constvars + invars).
+                    nbytes=nbytes, depth=depth, trips=trips,
+                    source=_source_of(eqn)))
+        # (sub-jaxpr, outer operands aligned to its invars, trip multiplier).
         # while's two jaxprs bind DIFFERENT operand subsets (cond_consts +
         # carry vs body_consts + carry); cond's first invar is the branch
         # index, bound by no branch; everything else binds eqn.invars
-        # positionally.
+        # positionally.  A scan body executes ``length`` times — its
+        # collectives are one logical site each with that trip count
+        # (while trip counts are dynamic: the multiplier stays 1).
+        sub_trips = trips
+        if eqn.primitive.name == "scan":
+            sub_trips = trips * max(1, int(eqn.params.get("length", 1)))
         sub_jaxprs = []
         if eqn.primitive.name == "while":
             cn = eqn.params["cond_nconsts"]
@@ -186,11 +226,13 @@ def _walk(jaxpr: jcore.Jaxpr, tracked: dict[Any, str],
         # UNFILTERED operand list — a Literal operand still consumes its
         # binder position (that binder is literal-bound and simply never
         # tracked); filtering literals out first would slide every later
-        # binder onto the wrong outer operand.
+        # binder onto the wrong outer operand.  Only ``sub.invars`` bind
+        # eqn operands: constvars are closure constants (ClosedJaxpr
+        # consts), and zipping them in front would slide every scan
+        # carry/xs binder onto the wrong outer operand.
         for sub, operands in sub_jaxprs:
             inner_tracked = dict()
-            for inner_v, outer_v in zip(list(sub.constvars) + list(sub.invars),
-                                        operands):
+            for inner_v, outer_v in zip(list(sub.invars), operands):
                 if isinstance(outer_v, jcore.Literal):
                     continue
                 if outer_v in tracked:
@@ -200,7 +242,7 @@ def _walk(jaxpr: jcore.Jaxpr, tracked: dict[Any, str],
             # threads into it); access tracking still needs inner binders.
             if inner_tracked or collectives is not None:
                 depth = _walk(sub, {**tracked, **inner_tracked}, records,
-                              depth, collectives)
+                              depth, collectives, sub_trips)
     return depth
 
 

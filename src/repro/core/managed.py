@@ -112,6 +112,10 @@ DECISION_OPS = frozenset({
     "matmul_reduce_scatter", "ring_attention", "expert_stream",
     # the whole-program planner (plan/planner.py) summary record
     "program_plan",
+    # the static verifier's preflight audit record (repro.analysis):
+    # axis carries the linted graph name, chunks the diagnostic count,
+    # nbytes the error count — suppressed warnings land in the trail
+    "lint",
 })
 
 _DECISION_LOG: list[DecisionRecord] = []

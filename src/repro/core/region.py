@@ -28,6 +28,49 @@ from repro.core import cost_model, instrument
 from repro.core.managed import MDMPConfig, get_config
 
 
+def _decl_site() -> tuple | None:
+    """Repo-relative (file, line) of the user frame declaring a spec —
+    the provenance the static verifier renders next to each diagnostic."""
+    import inspect
+    try:
+        for fr in inspect.stack(context=0)[2:8]:
+            fn = fr.filename
+            if fn.replace("\\", "/").endswith("core/region.py"):
+                continue
+            for marker in ("src/repro/", "tests/", "benchmarks/",
+                           "examples/"):
+                i = fn.find(marker)
+                if i >= 0:
+                    return (fn[i:], fr.lineno)
+            import os
+            return (os.path.basename(fn), fr.lineno)
+    except Exception:
+        pass
+    return None
+
+
+class UnknownAxisError(ValueError):
+    """A declaration references a mesh axis the region does not know.
+
+    Before this check, a typo'd axis name silently priced as size-1
+    (every ``axis_sizes.get(axis, 1)`` lookup), so the declaration cost
+    nothing and the managed runtime never scheduled it — exactly the
+    silent-drift class the static verifier (repro.analysis, MDMP001)
+    exists to catch."""
+
+    def __init__(self, region: str, label: str, axis: str,
+                 known: Sequence[str]):
+        self.region = region
+        self.label = label
+        self.axis = axis
+        self.known = tuple(known)
+        super().__init__(
+            f"region {region!r}: declaration {label!r} names axis "
+            f"{axis!r}, not one of the region's mesh axes "
+            f"{sorted(known)} — a typo'd axis would silently price as "
+            f"size-1 and never be scheduled (MDMP001)")
+
+
 @dataclasses.dataclass(frozen=True)
 class CommSpec:
     """One declared communication (a ``#pragma send``/``recv``/collective)."""
@@ -39,6 +82,9 @@ class CommSpec:
     #: (rows_local, cols) of the stencil block for kind="halo" — the
     #: aggregation decision needs the block geometry, not just bytes
     shape: tuple | None = None
+    #: repo-relative (file, line) of the declaring call — the static
+    #: verifier's diagnostics point a drifted declaration back here
+    site: tuple | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,12 +156,25 @@ class CommRegion:
 
     # -- declarations -------------------------------------------------------
 
+    def _add_spec(self, spec: CommSpec) -> None:
+        """Validate + append one declaration.  An axis name absent from
+        ``axis_sizes`` raises ``UnknownAxisError`` HERE, at declaration
+        time — before this check a typo'd axis silently priced as size-1
+        (``axis_sizes.get(axis, 1)``) and the communication was never
+        scheduled."""
+        if spec.axis not in self.axis_sizes:
+            raise UnknownAxisError(self.name, spec.label, spec.axis,
+                                   self.axis_sizes.keys())
+        if spec.site is None:
+            spec = dataclasses.replace(spec, site=_decl_site())
+        self._specs.append(spec)
+
     def _declare(self, label: str, kind: str, axis: str, shape, dtype,
                  collective: str) -> None:
         import numpy as np
         nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
-        self._specs.append(CommSpec(label=label, kind=kind, axis=axis,
-                                    nbytes=nbytes, collective=collective))
+        self._add_spec(CommSpec(label=label, kind=kind, axis=axis,
+                                nbytes=nbytes, collective=collective))
 
     def send(self, label: str, *, axis: str, shape, dtype) -> None:
         self._declare(label, "send", axis, shape, dtype, "all_gather")
@@ -136,9 +195,9 @@ class CommRegion:
         k=plan.chunks_for(label))``."""
         import numpy as np
         nbytes = int(cols) * np.dtype(dtype).itemsize   # one 1-row slab
-        self._specs.append(CommSpec(label=label, kind="halo", axis=axis,
-                                    nbytes=nbytes, collective="halo",
-                                    shape=(int(rows_local), int(cols))))
+        self._add_spec(CommSpec(label=label, kind="halo", axis=axis,
+                                nbytes=nbytes, collective="halo",
+                                shape=(int(rows_local), int(cols))))
 
     def attention(self, label: str, *, axis: str, batch: int, s_local: int,
                   heads: int, kv_heads: int, head_dim: int, d_model: int,
@@ -150,7 +209,7 @@ class CommRegion:
         import numpy as np
         ib = np.dtype(dtype).itemsize
         nbytes = 2 * batch * s_local * kv_heads * head_dim * ib  # kv block
-        self._specs.append(CommSpec(
+        self._add_spec(CommSpec(
             label=label, kind="attention", axis=axis, nbytes=nbytes,
             collective="attention",
             shape=(int(batch), int(s_local), int(heads), int(kv_heads),
@@ -170,7 +229,7 @@ class CommRegion:
         import numpy as np
         ib = np.dtype(dtype).itemsize
         nbytes = int(np.prod(batch_shape)) * ib
-        self._specs.append(CommSpec(
+        self._add_spec(CommSpec(
             label=label, kind="pipeline", axis=axis, nbytes=nbytes,
             collective="pipeline",
             shape=(int(n_layers), int(round(batch_fwd_s * 1e12)))))
@@ -190,7 +249,7 @@ class CommRegion:
         ib = np.dtype(dtype).itemsize
         cap = cost_model.moe_capacity(tokens_local, top_k, n_experts,
                                       capacity_factor)
-        self._specs.append(CommSpec(
+        self._add_spec(CommSpec(
             label=label, kind="moe", axis=axis,
             nbytes=n_experts * cap * d_model * ib, collective="moe",
             shape=(int(tokens_local), int(d_model), int(n_experts),
@@ -218,14 +277,14 @@ class CommRegion:
         ``mean_pages`` pages holding ``mean_prompt`` replayable tokens."""
         import numpy as np
         ib = np.dtype(dtype).itemsize
-        self._specs.append(CommSpec(
+        self._add_spec(CommSpec(
             label=label, kind="serve", axis=axis,
             nbytes=int(n_params) * ib, collective="serve",
             shape=(int(batch_slots), int(mean_prompt), int(mean_new),
                    int(max_prompt if max_prompt is not None
                        else mean_prompt), int(n_params), int(ib))))
         if page_bytes is not None:
-            self._specs.append(CommSpec(
+            self._add_spec(CommSpec(
                 label=f"{label}.preempt", kind="preempt", axis=axis,
                 nbytes=int(mean_pages) * int(page_bytes),
                 collective="preempt",
@@ -243,7 +302,7 @@ class CommRegion:
         "fixed"), read back via ``plan.chunks_for(label)`` and fed to
         ``TrainLoopConfig.ckpt_every`` — recovery traffic priced like any
         other declared communication."""
-        self._specs.append(CommSpec(
+        self._add_spec(CommSpec(
             label=label, kind="ckpt", axis=axis,
             nbytes=int(snapshot_bytes), collective="ckpt",
             shape=(int(snapshot_bytes), int(round(step_s * 1e9)),

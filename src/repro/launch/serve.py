@@ -70,6 +70,12 @@ def main() -> None:
                          "comm set (schedule + preempt knobs) and install "
                          "the coordinated ProgramPlan before the run")
     ap.add_argument("--mdmp-mode", default="auto")
+    ap.add_argument("--verify", default="warn",
+                    choices=("off", "warn", "strict"),
+                    help="static-verifier preflight (repro.analysis): "
+                         "'warn' prints findings and logs a "
+                         "DecisionRecord(op=\"lint\"); 'strict' exits "
+                         "non-zero on any error")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -91,10 +97,11 @@ def main() -> None:
                          preempt=args.preempt,
                          slo_ttft_s=args.slo_ttft,
                          max_queue=args.max_queue)
-    if args.plan != "local":
-        # Whole-program pass over the serving comm set: the batching
-        # schedule and the preemption policy resolve jointly (one
-        # ProgramPlan, one trail) instead of knob-by-knob.
+    prog = None
+    if args.plan != "local" or args.verify != "off":
+        # Lower the serving comm set once — the whole-program planner
+        # (--plan) and the static-verifier preflight (--verify) both
+        # consume it.
         import jax.numpy as jnp
         from repro.plan import CommOp, plan_program
         n_params = float(cfg.param_count())
@@ -126,14 +133,23 @@ def main() -> None:
                          "n_params": n_params}),
         ]
         prog = plan_program(ops, notes=[f"launch.serve {args.arch}"])
-        kind = "coordinated" if prog.coordinated else "local"
-        print(f"decision program_plan({kind} ops={len(prog.choices)} "
-              f"topo={prog.topology} "
-              f"local-concat={prog.local_solo_sum_s * 1e6:.1f}us "
-              f"joint={prog.joint_cost_s * 1e6:.1f}us)")
-        for line in prog.summary().splitlines()[1:]:
-            print(f"  trail{line}")
-        managed.install_plan(prog)
+        if args.plan != "local":
+            kind = "coordinated" if prog.coordinated else "local"
+            print(f"decision program_plan({kind} ops={len(prog.choices)} "
+                  f"topo={prog.topology} "
+                  f"local-concat={prog.local_solo_sum_s * 1e6:.1f}us "
+                  f"joint={prog.joint_cost_s * 1e6:.1f}us)")
+            for line in prog.summary().splitlines()[1:]:
+                print(f"  trail{line}")
+            managed.install_plan(prog)
+        if args.verify != "off":
+            # Static-verifier preflight over the serving comm set under
+            # the knobs this launch will run.
+            from repro import analysis
+            graph = analysis.from_ops(
+                f"serve:{args.arch}", axis_sizes={"serve": args.slots},
+                declared=ops, plan=prog)
+            analysis.preflight(graph, args.verify)
     rng = np.random.default_rng(0)
     lo = min(args.min_prompt_len, args.prompt_len)
     plens = rng.integers(lo, args.prompt_len + 1, size=args.requests)

@@ -69,6 +69,13 @@ def main() -> None:
                     help="deterministic fault injection spec, e.g. "
                          "'transient@6;slow@9:0.5;corrupt@14' "
                          "(core/faults.py grammar)")
+    ap.add_argument("--verify", default="warn",
+                    choices=["off", "warn", "strict"],
+                    help="static-verifier preflight (repro.analysis): "
+                         "'warn' prints findings and logs a "
+                         "DecisionRecord(op=\"lint\"); 'strict' exits "
+                         "non-zero on any error with the declared/"
+                         "traced side-by-side")
     args = ap.parse_args()
 
     import dataclasses
@@ -106,50 +113,28 @@ def main() -> None:
     from repro.core.tuner import ScheduleTuner
     managed_lib.clear_decision_log()
     tuner = ScheduleTuner()
-    if args.plan != "local":
-        # Whole-program pass: lower this step's communication set to
-        # comm-IR ops, price the JOINT schedule, and install the plan so
-        # every resolve_* call below prefers the coordinated knob.
-        import jax.numpy as jnp
-        from repro.plan import lower_train_ops, plan_program
+    prog = None
+    if args.plan != "local" or args.verify != "off":
+        # Lower this step's communication set to comm-IR ops once —
+        # the whole-program planner (--plan) and the static-verifier
+        # preflight (--verify) both consume it, so the linted program
+        # is exactly the planned one.
+        from repro.plan import (lower_train_ops, plan_program,
+                                train_geometry)
         hw = managed_lib.get_config().hw
-        ib = jnp.dtype(cfg.dtype).itemsize
-        gb, sl = args.batch, args.seq
-        b_loc = max(1, gb // max(1, ctx.dp))
-        attention = None
-        if getattr(cfg, "n_heads", 0) and ctx.tp > 1:
-            attention = {"batch": b_loc, "s_local": max(1, sl // ctx.tp),
-                         "heads": cfg.n_heads, "kv_heads": cfg.n_kv_heads,
-                         "head_dim": cfg.head_dim, "d_model": cfg.d_model,
-                         "causal": True, "dtype_bytes": ib}
-        moe_geom = None
-        if cfg.moe is not None and ctx.tp > 1:
-            moe_geom = {"tokens_local": b_loc * sl,
-                        "d_model": cfg.d_model,
-                        "n_experts": cfg.moe.n_experts,
-                        "top_k": cfg.moe.top_k,
-                        "d_ff_expert": cfg.moe.d_ff_expert,
-                        "capacity_factor": cfg.moe.capacity_factor,
-                        "mults": 3, "dtype_bytes": ib}
-        pipe_geom = None
-        if args.pipeline != "none":
-            # mirror build_train_step's cost-model inputs exactly
-            n_stage = ctx.pods
-            pipe_geom = {
-                "axis": "pod", "n_layers": cfg.n_layers,
-                "batch_fwd_s": (2.0 * cfg.param_count() / n_stage
-                                * (b_loc * sl) / hw.peak_flops),
-                "batch_bytes": (b_loc * (sl // max(1, ctx.tp))
-                                * cfg.d_model * ib),
-                "candidate_micro": tuple(
-                    m for m in (1, 2, 4, 8, 16, 32, 64)
-                    if b_loc % m == 0)}
+        geo = train_geometry(cfg, mesh_axes=dict(ctx.axis_sizes),
+                             batch=args.batch, seq=args.seq, hw=hw,
+                             pipeline=args.pipeline)
         ops = lower_train_ops(
-            mesh_axes=dict(ctx.axis_sizes),
-            grad_bytes=int(cfg.param_count()) * 4,
-            pipeline=pipe_geom, attention=attention, moe=moe_geom)
+            mesh_axes=geo["mesh_axes"], grad_bytes=geo["grad_bytes"],
+            pipeline=geo["pipeline"], attention=geo["attention"],
+            moe=geo["moe"])
         prog = plan_program(ops, hw=hw,
                             notes=[f"launch.train {args.arch}"])
+    if args.plan != "local":
+        # Whole-program pass: price the JOINT schedule and install the
+        # plan so every resolve_* call below prefers the coordinated
+        # knob.
         kind = "coordinated" if prog.coordinated else "local"
         print(f"decision program_plan({kind} ops={len(prog.choices)} "
               f"topo={prog.topology} "
@@ -159,6 +144,28 @@ def main() -> None:
             print(f"  trail{line}")
         tuner.store_program_plan(prog)
         managed_lib.install_plan(prog)
+    if args.verify != "off":
+        # Static-verifier preflight: drift/permute/deadlock/race/
+        # feasibility passes over the lowered comm set under the knobs
+        # this launch will actually run (forced flags override the
+        # plan's picks, so strict mode catches the clamp BEFORE the
+        # executor silently degrades it).
+        from repro import analysis
+        key = "pipeline_schedule|pod"
+        if args.microbatches is not None:
+            knob = dict(prog.knobs.get(key)
+                        or {"mode": args.pipeline, "virtual": 2})
+            knob["chunks"] = args.microbatches
+            if args.pipeline not in ("none", "auto"):
+                knob["mode"] = args.pipeline
+            prog.knobs[key] = knob
+        elif args.pipeline not in ("none", "auto") and key in prog.knobs:
+            prog.knobs[key] = dict(prog.knobs[key],
+                                   mode=args.pipeline)
+        graph = analysis.from_ops(
+            f"train:{args.arch}", axis_sizes=dict(ctx.axis_sizes),
+            declared=ops, plan=prog, hw=hw)
+        analysis.preflight(graph, args.verify)
     step_fn, pshard, bshard = build_train_step(
         model, opt_cfg, mesh, compress_pod=args.compress_pod,
         pipeline=args.pipeline, pipe_microbatches=args.microbatches,

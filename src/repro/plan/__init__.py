@@ -15,13 +15,13 @@ account per contention set — and emits a single coordinated
 
 from repro.plan.ir import (CommOp, crosscheck_collectives,
                            lower_collectives, lower_region, lower_specs,
-                           lower_train_ops)
+                           lower_train_ops, train_geometry)
 from repro.plan.planner import (Candidate, OpChoice, ProgramPlan,
                                 candidates_for, plan_program)
 
 __all__ = [
     "CommOp", "lower_specs", "lower_region", "lower_collectives",
-    "lower_train_ops", "crosscheck_collectives",
+    "lower_train_ops", "train_geometry", "crosscheck_collectives",
     "Candidate", "OpChoice", "ProgramPlan", "candidates_for",
     "plan_program",
 ]

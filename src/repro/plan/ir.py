@@ -152,6 +152,9 @@ def lower_specs(specs: Sequence[Any], axis_sizes: dict[str, int],
             op_name = _KIND_TO_OP.get(spec.collective, "all_gather")
         n = int(axis_sizes.get(spec.axis, 1))
         meta: dict[str, Any] = {"collective": spec.collective}
+        site = getattr(spec, "site", None)
+        if site is not None:            # declaration provenance -> diagnostics
+            meta["site"] = (str(site[0]), int(site[1]))
         dtype_bytes = 4
         if kind == "halo" and spec.shape is not None:
             rows_local, cols = spec.shape
@@ -238,11 +241,18 @@ def lower_collectives(records: Sequence[instrument.CollectiveRecord],
         if op_name not in _KIND_TO_OP.values():
             op_name = "all_gather"
         t0 = max(0.0, min(0.99, r.depth / total))
+        meta: dict[str, Any] = {"collective": op_name,
+                                "depth": int(r.depth),
+                                "primitive": r.primitive,
+                                "trips": int(getattr(r, "trips", 1))}
+        src = getattr(r, "source", "")
+        if src:                         # jaxpr eqn provenance -> diagnostics
+            meta["source"] = src
         ops.append(CommOp(
             kind="collective", label=f"{r.primitive}#{i}", op_name=op_name,
             axis=r.axis, axis_size=int(axis_sizes.get(r.axis, 1)),
             nbytes=int(r.nbytes), phase="fwd", window=(t0, 1.0),
-            meta={"collective": op_name, "depth": int(r.depth)}))
+            meta=meta))
     return ops
 
 
@@ -271,6 +281,57 @@ def crosscheck_collectives(ops: Sequence[CommOp],
         if db > 0 and traced and axis not in traced:
             notes.append(f"axis {axis}: {db}B declared, none traced")
     return notes
+
+
+def train_geometry(cfg, *, mesh_axes: dict[str, int], batch: int, seq: int,
+                   hw, pipeline: str = "none") -> dict:
+    """Build the per-subsystem geometry dicts a training launch lowers
+    from — the single source launch/train.py's planner path AND the
+    static-verifier preflight (launch/lint.py) share, so the linted
+    program is exactly the planned one.
+
+    Returns ``{"mesh_axes", "grad_bytes", "attention", "moe",
+    "pipeline"}`` — feed the last four straight into ``lower_train_ops``.
+    """
+    import jax.numpy as jnp
+    ib = int(jnp.dtype(cfg.dtype).itemsize)
+    dp = int(mesh_axes.get("data", 1))
+    tp = int(mesh_axes.get("model", 1))
+    pods = int(mesh_axes.get("pod", 1))
+    b_loc = max(1, int(batch) // max(1, dp))
+    attention = None
+    if getattr(cfg, "n_heads", 0) and tp > 1:
+        attention = {"batch": b_loc, "s_local": max(1, seq // tp),
+                     "heads": cfg.n_heads, "kv_heads": cfg.n_kv_heads,
+                     "head_dim": cfg.head_dim, "d_model": cfg.d_model,
+                     "causal": True, "dtype_bytes": ib}
+    moe_geom = None
+    if getattr(cfg, "moe", None) is not None and tp > 1:
+        moe_geom = {"tokens_local": b_loc * seq,
+                    "d_model": cfg.d_model,
+                    "n_experts": cfg.moe.n_experts,
+                    "top_k": cfg.moe.top_k,
+                    "d_ff_expert": cfg.moe.d_ff_expert,
+                    "capacity_factor": cfg.moe.capacity_factor,
+                    "mults": 3, "dtype_bytes": ib}
+    pipe_geom = None
+    if pipeline != "none":
+        # mirror build_train_step's cost-model inputs exactly
+        n_stage = pods
+        pipe_geom = {
+            "axis": "pod", "n_layers": cfg.n_layers,
+            "batch_fwd_s": (2.0 * cfg.param_count() / n_stage
+                            * (b_loc * seq) / hw.peak_flops),
+            "batch_bytes": (b_loc * (seq // max(1, tp))
+                            * cfg.d_model * ib),
+            "local_batch": b_loc,
+            "candidate_micro": tuple(
+                m for m in (1, 2, 4, 8, 16, 32, 64)
+                if b_loc % m == 0)}
+    return {"mesh_axes": dict(mesh_axes),
+            "grad_bytes": int(cfg.param_count()) * 4,
+            "attention": attention, "moe": moe_geom,
+            "pipeline": pipe_geom}
 
 
 def lower_train_ops(*, mesh_axes: dict[str, int], model_axis: str = "model",
