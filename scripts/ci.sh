@@ -136,6 +136,49 @@ echo "$fault_out" | grep -q "faults injected=2 unfired=0 restarts=1" || {
 echo "$fault_out" | grep -q "done at step 8" || {
     echo "FAIL: fault smoke did not run to completion"; exit 1; }
 
+echo "== trace gate (mdmptrace: --trace export, calibration, --diff) =="
+rm -f /tmp/mdmp_ci_trace_serve.json /tmp/mdmp_ci_trace_serve2.json \
+    /tmp/mdmp_ci_trace_train.json
+trace_serve="$(python -m repro.launch.serve --arch mamba2-130m --reduced \
+    --schedule auto --requests 6 --slots 2 --new-tokens 8 --max-seq 64 \
+    --prompt-len 12 --trace /tmp/mdmp_ci_trace_serve.json)"
+echo "$trace_serve" | grep -q "calibration: .* decisions correlated" || {
+    echo "FAIL: serve trace run printed no calibration report"; exit 1; }
+rm -rf /tmp/mdmp_ci_trace_ckpt
+trace_train="$(python -m repro.launch.train --arch granite-34b --reduced \
+    --steps 4 --batch 4 --seq 32 --ckpt-every auto \
+    --ckpt /tmp/mdmp_ci_trace_ckpt \
+    --trace /tmp/mdmp_ci_trace_train.json)"
+echo "$trace_train" | grep -q "calibration: .* decisions correlated" || {
+    echo "FAIL: train trace run printed no calibration report"; exit 1; }
+# both artifacts must be valid Chrome traces with the expected tracks,
+# span events, decision instants, and an embedded calibration ledger
+python - <<'EOF'
+from repro.obs.export import load_trace, trace_tracks
+for path, need in (
+        ("/tmp/mdmp_ci_trace_serve.json", {"decisions", "serve"}),
+        ("/tmp/mdmp_ci_trace_train.json", {"decisions", "compute",
+                                           "ckpt"})):
+    doc = load_trace(path)
+    tracks = set(trace_tracks(doc).values())
+    assert need <= tracks, f"{path}: tracks {tracks} missing {need}"
+    evs = doc["traceEvents"]
+    assert any(e["ph"] == "X" for e in evs), f"{path}: no spans"
+    assert any(e["ph"] == "i" and e.get("s") == "p" for e in evs), \
+        f"{path}: no decision instants"
+    cal = doc["otherData"]["calibration"]
+    assert cal["coverage"] >= 0.9, f"{path}: coverage {cal['coverage']}"
+print("trace artifacts OK")
+EOF
+# a second identical serve run must diff clean under a generous bound
+python -m repro.launch.serve --arch mamba2-130m --reduced \
+    --schedule auto --requests 6 --slots 2 --new-tokens 8 --max-seq 64 \
+    --prompt-len 12 --trace /tmp/mdmp_ci_trace_serve2.json > /dev/null
+python -m repro.launch.trace --diff /tmp/mdmp_ci_trace_serve.json \
+    /tmp/mdmp_ci_trace_serve2.json --threshold 4.0 || {
+    echo "FAIL: identical serve configs diff past +400%"; exit 1; }
+echo "trace gate OK"
+
 echo "== benchmark smoke (python -m benchmarks.run) =="
 out="$(MDMP_BENCH_REPS="${MDMP_BENCH_REPS:-2}" python -m benchmarks.run)"
 echo "$out" | tail -40
@@ -220,6 +263,15 @@ echo "$out" | grep -q "plan_conflict_program,.*allclose=local" || {
     echo "FAIL: program-plan conflict row missing"; exit 1; }
 echo "$out" | grep -q "plan_conflict_decision,.*trail=program_plan(coordinated" || {
     echo "FAIL: program-plan decision trail entry missing"; exit 1; }
+# Trace-overhead smoke: the mdmptrace tax must be measured (the <2%
+# bound and bit-identical disabled path are asserted in the row text)
+# and the machine-readable summary must have been written.
+echo "$out" | grep -q "trace_overhead_enabled,.*bound 2%" || {
+    echo "FAIL: trace overhead row missing"; exit 1; }
+echo "$out" | grep -q "trace_disabled_identical,.*bit-identical=True" || {
+    echo "FAIL: disabled tracer is not bit-identical"; exit 1; }
+echo "$out" | grep -q "bench_summary,0.00,.*BENCH_summary.json" || {
+    echo "FAIL: BENCH_summary.json row missing"; exit 1; }
 echo "$out" | grep -q "measured_suite,0.00,ERROR" && {
     echo "FAIL: measured suite subprocess errored"; exit 1; }
 echo "CI OK"

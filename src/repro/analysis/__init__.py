@@ -27,8 +27,9 @@ from typing import Callable, Sequence
 
 from repro.analysis.diagnostics import CODES, Diagnostic, Site, make
 from repro.analysis.graph import (BufferAccess, CommGraph, InFlight,
-                                  PermuteSite, WaitEdge, derive_permutes,
-                                  from_corpus, from_ops, ring_perm)
+                                  PermuteSite, WaitEdge, attach_trace,
+                                  derive_permutes, from_corpus, from_ops,
+                                  ring_perm)
 from repro.analysis.passes import (PASSES, check_axes, check_drift,
                                    check_feasibility, check_ordering,
                                    check_overlap, check_permutes,
@@ -56,7 +57,10 @@ def preflight(graph: CommGraph, mode: str = "warn", *,
     """
     if mode == "off":
         return []
-    diags = run_all(graph)
+    from repro.obs.tracer import get_tracer
+    with get_tracer().span("lint.preflight", op="lint", track="lint",
+                           graph=graph.name):
+        diags = run_all(graph)
     errors = sum(1 for d in diags if d.severity == "error")
     if diags:
         out(render(diags, verbose=(mode == "strict")))
@@ -75,7 +79,8 @@ def preflight(graph: CommGraph, mode: str = "warn", *,
 __all__ = [
     "CODES", "Diagnostic", "Site", "make",
     "BufferAccess", "CommGraph", "InFlight", "PermuteSite", "WaitEdge",
-    "derive_permutes", "from_corpus", "from_ops", "ring_perm",
+    "attach_trace", "derive_permutes", "from_corpus", "from_ops",
+    "ring_perm",
     "PASSES", "check_axes", "check_drift", "check_feasibility",
     "check_ordering", "check_overlap", "check_permutes", "run_all",
     "exit_code", "render", "summary",

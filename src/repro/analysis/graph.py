@@ -168,6 +168,33 @@ def from_ops(name: str, *, axis_sizes: dict[str, int],
     return g
 
 
+def attach_trace(graph: CommGraph, spans: Sequence[Any], *,
+                 replace: bool = True) -> CommGraph:
+    """Swap the graph's *declared* overlap story for the *measured* one.
+
+    Declared ``inflight``/``accesses`` rows encode when the program
+    claims transfers hold buffers and compute touches them.  A runtime
+    trace knows when they actually did: every span carrying a
+    ``buffer=`` attr is a real in-flight window, and ``reads=``/
+    ``writes=`` attrs are real compute touches (pinned at the span
+    midpoint).  This rebuilds pass 4's inputs from those spans, so
+    MDMP401/402 fire on races that happened rather than races that were
+    declared — the trace feedback edge into the static verifier.
+
+    ``replace=False`` appends instead, checking measured windows
+    against the declared access story (and vice versa).
+    """
+    from repro.obs.export import measured_windows
+    windows, touches = measured_windows(spans)
+    inflight = [] if replace else list(graph.inflight)
+    accesses = [] if replace else list(graph.accesses)
+    inflight += [InFlight(buffer=b, t0=t0, t1=t1, label=label)
+                 for (b, t0, t1, label) in windows]
+    accesses += [BufferAccess(buffer=b, time=t, access=acc, label=label)
+                 for (b, t, acc, label) in touches]
+    return dataclasses.replace(graph, inflight=inflight, accesses=accesses)
+
+
 def from_corpus(case: dict, hw: Any = None) -> CommGraph:
     """Build the graph from a lint-corpus JSON case (tests/lint_corpus).
 

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.metrics import CheckpointMetrics
+from repro.obs.tracer import get_tracer
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
@@ -218,13 +219,18 @@ class CheckpointManager:
     def save_async(self, step: int, tree: Any,
                    extra: dict | None = None) -> None:
         self.wait()
+        # capture the ambient tracer HERE: the writer thread emits its
+        # drain/commit spans on the same ring, concurrent with the loop
+        tr = get_tracer()
         t0 = time.perf_counter()
-        snapshot = _device_copy(tree)
-        # the snapshot must materialise before returning: the caller's
-        # next step donates the source buffers, and the copy is what the
-        # drain reads.  This block is the δ the loop pays up front — an
-        # HBM copy, not a PCIe round trip.
-        jax.block_until_ready(snapshot)
+        with tr.span("ckpt.snapshot", track="ckpt", step=step,
+                     buffer="ckpt_snapshot"):
+            snapshot = _device_copy(tree)
+            # the snapshot must materialise before returning: the
+            # caller's next step donates the source buffers, and the
+            # copy is what the drain reads.  This block is the δ the
+            # loop pays up front — an HBM copy, not a PCIe round trip.
+            jax.block_until_ready(snapshot)
         snapshot_s = time.perf_counter() - t0
         nbytes = sum(leaf.size * leaf.dtype.itemsize
                      for leaf in jax.tree.leaves(snapshot)
@@ -234,12 +240,16 @@ class CheckpointManager:
         def work():
             try:
                 t1 = time.perf_counter()
-                host_tree = jax.tree.map(
-                    lambda x: _drain_leaf(x, chunk), snapshot)
+                with tr.span("ckpt.drain", track="ckpt", step=step,
+                             nbytes=nbytes, buffer="ckpt_snapshot"):
+                    host_tree = jax.tree.map(
+                        lambda x: _drain_leaf(x, chunk), snapshot)
                 drain_s = time.perf_counter() - t1
                 t2 = time.perf_counter()
-                save(self.ckpt_dir, step, host_tree, extra)
-                self._gc()
+                with tr.span("ckpt.commit", track="ckpt", step=step,
+                             nbytes=nbytes):
+                    save(self.ckpt_dir, step, host_tree, extra)
+                    self._gc()
                 self.metrics.note_save(step, nbytes, snapshot_s, drain_s,
                                        time.perf_counter() - t2)
             except BaseException as e:   # surfaced on next wait()

@@ -16,6 +16,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.obs.registry import MetricsRegistry
+
 
 @dataclasses.dataclass(frozen=True)
 class SaveRecord:
@@ -33,9 +35,18 @@ class RestoreRecord:
 
 
 class CheckpointMetrics:
-    def __init__(self):
+    """Estimators ride the unified ``obs.MetricsRegistry``; the record
+    lists stay for tests and the summary's byte count."""
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        self.reg = registry if registry is not None else MetricsRegistry()
         self.saves: list[SaveRecord] = []
         self.restores: list[RestoreRecord] = []
+        # max-rate / min-cost: "a slow save means contention, not a
+        # slower disk" — the noise-robust estimators as registry extrema
+        self._write_bw = self.reg.extremum("ckpt.write_bw", kind="max")
+        self._cost = self.reg.extremum("ckpt.cost_s", kind="min")
+        self._restore = self.reg.extremum("ckpt.restore_s", kind="min")
 
     # -- recording -----------------------------------------------------------
 
@@ -43,30 +54,29 @@ class CheckpointMetrics:
                   drain_s: float, write_s: float) -> None:
         self.saves.append(SaveRecord(step, nbytes, snapshot_s, drain_s,
                                      write_s))
+        if drain_s + write_s > 0:
+            self._write_bw.observe(nbytes / (drain_s + write_s))
+        self._cost.observe(snapshot_s + drain_s)
 
     def note_restore(self, step: int, restore_s: float) -> None:
         self.restores.append(RestoreRecord(step, restore_s))
+        self._restore.observe(restore_s)
 
     # -- estimates fed back into the cost model ------------------------------
 
     def write_bw_estimate(self) -> float | None:
-        """Measured end-to-end checkpoint bandwidth, bytes/s: max over
-        saves of nbytes / (drain + write) — the max is the noise-robust
-        estimator on a shared host (a slow save means contention, not a
-        slower disk)."""
-        rates = [s.nbytes / (s.drain_s + s.write_s) for s in self.saves
-                 if s.drain_s + s.write_s > 0]
-        return max(rates) if rates else None
+        """Measured end-to-end checkpoint bandwidth, bytes/s: running max
+        over saves of nbytes / (drain + write)."""
+        return self._write_bw.value
 
     def ckpt_cost_s_estimate(self) -> float | None:
         """δ of the Young/Daly model: the per-checkpoint seconds the run
         actually pays (snapshot block + the metered drain; the disk write
-        rides the writer thread off the critical path)."""
-        costs = [s.snapshot_s + s.drain_s for s in self.saves]
-        return min(costs) if costs else None
+        rides the writer thread off the critical path) — running min."""
+        return self._cost.value
 
     def restore_s_estimate(self) -> float | None:
-        return min((r.restore_s for r in self.restores), default=None)
+        return self._restore.value
 
     # -- aggregates ----------------------------------------------------------
 

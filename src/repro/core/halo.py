@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.obs.tracer import dispatch_span
+
 Array = jax.Array
 
 
@@ -181,6 +183,21 @@ def jacobi_solve(u0: Array, f: Array, axis_name: str, iters: int,
                          2*iters to 2*ceil(iters/k) + 2 (the +2 is the
                          one-time f-ghost exchange).
     """
+    # one span per solve dispatch; scale=iters so dur/scale is measured
+    # per-sweep seconds, the unit decide_halo_aggregation predicts
+    row_bytes = int(u0.size // max(1, u0.shape[0])) * u0.dtype.itemsize
+    with dispatch_span("halo.solve", u0, op="halo_aggregation",
+                       axis=axis_name, nbytes=k * row_bytes, mode=mode,
+                       k=k, scale=iters, buffer="halo_rows"):
+        return _jacobi_solve(u0, f, axis_name, iters, mode, k=k,
+                             periodic=periodic, engine=engine,
+                             blk_m=blk_m, interpret=interpret)
+
+
+def _jacobi_solve(u0: Array, f: Array, axis_name: str, iters: int,
+                  mode: str = "bulk", *, k: int = 1,
+                  periodic: bool = False, engine: str = "jnp",
+                  blk_m: int = 256, interpret: bool = True) -> Array:
     if mode == "aggregated":
         k = max(1, int(k))
         u = u0

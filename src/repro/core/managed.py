@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from functools import partial
 from typing import Any, Sequence
 
@@ -36,6 +37,7 @@ from jax import lax
 
 from repro.core import cost_model
 from repro.core.cost_model import HardwareModel, TPU_V5E
+from repro.obs.tracer import dispatch_span
 
 Array = jax.Array
 
@@ -95,6 +97,11 @@ class DecisionRecord:
     chunks: int
     predicted_bulk_s: float
     predicted_interleaved_s: float
+    #: monotonic log time (``time.perf_counter``), stamped by
+    #: ``log_decision`` — the join key that places the decision instant
+    #: on the trace timeline next to its measured spans.  Excluded from
+    #: equality so decision-trail comparisons stay timestamp-free.
+    t: float | None = dataclasses.field(default=None, compare=False)
 
 
 #: Every DecisionRecord ``op`` the managed runtime may emit — ONE registry
@@ -127,6 +134,10 @@ def log_decision(rec: DecisionRecord) -> None:
     assert rec.op in DECISION_OPS, (
         f"unregistered DecisionRecord op {rec.op!r}; add it to "
         f"managed.DECISION_OPS")
+    if rec.t is None:
+        # stamp log time here (not in the resolver) so every emission
+        # site gets trace-timeline placement for free
+        object.__setattr__(rec, "t", time.perf_counter())
     _DECISION_LOG.append(rec)
 
 
@@ -136,6 +147,32 @@ def decision_log() -> list[DecisionRecord]:
 
 def clear_decision_log() -> None:
     _DECISION_LOG.clear()
+
+
+class capture_decisions:
+    """``with managed.capture_decisions() as cap: ...`` — scoped view of
+    the decisions logged inside the block, WITHOUT clearing or copying
+    the global trail (``_DECISION_LOG`` only ever grows; tests and the
+    trace exporter need "the records of THIS run", not "all records
+    since import").  ``cap.records`` is live: it re-slices the trail on
+    every access, so it is valid both inside the block and after exit
+    (where it is pinned to the block's extent)."""
+
+    def __init__(self) -> None:
+        self._start = 0
+        self._end: int | None = None
+
+    def __enter__(self) -> "capture_decisions":
+        self._start = len(_DECISION_LOG)
+        self._end = None
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self._end = len(_DECISION_LOG)
+
+    @property
+    def records(self) -> list[DecisionRecord]:
+        return list(_DECISION_LOG[self._start:self._end])
 
 
 # ---------------------------------------------------------------------------
@@ -812,9 +849,12 @@ def managed_ring_attention(q: Array, k: Array, v: Array, axis_name: str,
     Returns [B, S_loc, H, hd] in q's dtype, allclose to flash attention
     over the all-gathered KV (the ``mode='bulk'`` fallback).
     """
-    out, _ = _ring_attention_fwd_impl(q, k, v, axis_name, causal, window,
-                                      mode)
-    return out
+    with dispatch_span("attention.ring", q, op="ring_attention",
+                       axis=axis_name, nbytes=2 * _nbytes(k),
+                       buffer="kv_blocks"):
+        out, _ = _ring_attention_fwd_impl(q, k, v, axis_name, causal,
+                                          window, mode)
+        return out
 
 
 def _ring_attention_fwd_impl(q, k, v, axis_name, causal, window, mode):
@@ -1230,6 +1270,17 @@ def managed_expert_stream(buffers: Array, counts: Array, axis_name: str,
 
     _resolve("expert_stream", axis_name, buffers, "interleaved", eff_g,
              "all_to_all")
+    with dispatch_span("moe.expert_stream", buffers, op="expert_stream",
+                       axis=axis_name, nbytes=_nbytes(buffers),
+                       chunks=eff_g, buffer="expert_buffers"):
+        return _expert_stream_body(blocks, cnt_blocks, axis_name,
+                                   expert_fn, n, eff_g, cs, idx)
+
+
+def _expert_stream_body(blocks, cnt_blocks, axis_name, expert_fn, n,
+                        eff_g, cs, idx):
+    _, e_loc, c, d = blocks.shape
+    e = n * e_loc
 
     out = None
     cur = _dyn_block(blocks, idx)

@@ -76,7 +76,18 @@ def main() -> None:
                          "'warn' prints findings and logs a "
                          "DecisionRecord(op=\"lint\"); 'strict' exits "
                          "non-zero on any error")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record every quantum/swap/preemption to a "
+                         "Chrome-trace JSON (open in ui.perfetto.dev), "
+                         "print the predicted-vs-measured calibration "
+                         "report, and embed the ledger in the file")
     args = ap.parse_args()
+
+    if args.trace:
+        # install before the engine resolves anything so admission,
+        # preflight and every quantum land on one ring
+        from repro import obs
+        obs.install_tracer(obs.Tracer())
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
            else configs.get_config(args.arch))
@@ -198,6 +209,24 @@ def main() -> None:
     for i, r in enumerate(rids[:4]):
         if r is not None and r in out:
             print(f"  req{i} (P={int(plens[i])}): {out[r].tolist()}")
+    if args.trace:
+        from repro import obs
+        tr = obs.get_tracer()
+        decisions = managed.decision_log()
+        # decode-graph decisions (attention/halo modes) fire at trace
+        # time inside the jitted decode step the quantum span runs
+        obs.cover_with(tr.spans(), "serve.quantum",
+                       (r.op for r in decisions))
+        led = obs.CalibrationLedger()
+        led.correlate(tr.spans(), decisions)
+        print(led.report())
+        obs.write_chrome_trace(
+            args.trace, tr, decisions,
+            other_data={"run": f"serve:{args.arch}",
+                        "calibration": led.snapshot()})
+        print(f"trace: {args.trace} ({tr.n_spans} spans, "
+              f"{len(decisions)} decisions, "
+              f"coverage {led.coverage() * 100:.0f}%)")
 
 
 if __name__ == "__main__":

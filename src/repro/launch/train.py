@@ -76,7 +76,18 @@ def main() -> None:
                          "DecisionRecord(op=\"lint\"); 'strict' exits "
                          "non-zero on any error with the declared/"
                          "traced side-by-side")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record every hot path to a Chrome-trace JSON "
+                         "(open in ui.perfetto.dev), print the "
+                         "predicted-vs-measured calibration report, and "
+                         "embed the calibration ledger in the file")
     args = ap.parse_args()
+
+    if args.trace:
+        # install before anything resolves so planner/lint/step spans
+        # and decision timestamps all land on one ring
+        from repro import obs
+        obs.install_tracer(obs.Tracer())
 
     import dataclasses
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -228,6 +239,25 @@ def main() -> None:
               f"{h['time_s']:.2f}s")
     print(f"done at step {out['step']}, final loss "
           f"{out['history'][-1]['loss']:.4f}")
+    if args.trace:
+        from repro import obs
+        tr = obs.get_tracer()
+        decisions = managed_lib.decision_log()
+        # jit-interior decisions (attention/halo/MoE/pipeline modes) have
+        # no host-side span of their own — the train.step span covers the
+        # XLA program they were compiled into
+        obs.cover_with(tr.spans(), "train.step",
+                       (r.op for r in decisions))
+        led = obs.CalibrationLedger()
+        led.correlate(tr.spans(), decisions)
+        print(led.report())
+        obs.write_chrome_trace(
+            args.trace, tr, decisions,
+            other_data={"run": f"train:{args.arch}",
+                        "calibration": led.snapshot()})
+        print(f"trace: {args.trace} ({tr.n_spans} spans, "
+              f"{len(decisions)} decisions, "
+              f"coverage {led.coverage() * 100:.0f}%)")
 
 
 if __name__ == "__main__":

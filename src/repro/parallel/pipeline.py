@@ -44,6 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.obs.tracer import dispatch_span
+
 Array = jax.Array
 
 SCHEDULES = ("gpipe", "1f1b", "interleaved")
@@ -357,7 +359,15 @@ def pipeline_value_and_grad(chunk_fn: Callable, loss_fn: Callable,
     stash0 = jnp.zeros((sched.n_stash,) + act_shape, act_dtype)
     grads0 = jax.tree.map(jnp.zeros_like, params)
     carry0 = (zero_act, zero_act, stash0, grads0, jnp.float32(0.0))
-    (_, _, _, grads, loss_acc), _ = lax.scan(tick, carry0, tables)
+    # one span per pipeline dispatch; scale = tick count so dur/scale is
+    # measured per-tick seconds when this runs eagerly
+    with dispatch_span("pipeline.ticks", carry0[0],
+                       op="pipeline_schedule", axis=axis_name,
+                       nbytes=int(np.prod(act_shape))
+                       * jnp.dtype(act_dtype).itemsize,
+                       scale=max(1, int(sched.ticks)),
+                       schedule=sched.name, buffer="stage_handoff"):
+        (_, _, _, grads, loss_acc), _ = lax.scan(tick, carry0, tables)
 
     loss = loss_acc / m if mean else loss_acc
     if s > 1:
@@ -414,8 +424,14 @@ def pipeline_apply(stage_fn: Callable[[Array, Any], Array],
 
     inflight0 = jnp.zeros_like(x_microbatches[0])
     outputs0 = jnp.zeros_like(x_microbatches)
-    (_, outputs), _ = lax.scan(tick, (inflight0, outputs0),
-                               jnp.arange(ticks))
+    with dispatch_span("pipeline.apply", x_microbatches,
+                       op="pipeline_schedule", axis=axis_name,
+                       nbytes=int(inflight0.size)
+                       * inflight0.dtype.itemsize,
+                       scale=max(1, int(ticks)), schedule="gpipe_fwd",
+                       buffer="stage_handoff"):
+        (_, outputs), _ = lax.scan(tick, (inflight0, outputs0),
+                                   jnp.arange(ticks))
     return outputs
 
 

@@ -36,6 +36,7 @@ from typing import Sequence
 from repro.core import cost_model, managed
 from repro.core.cost_model import CommComponents
 from repro.core.overlap import OverlapAccount
+from repro.obs.tracer import get_tracer
 from repro.plan.ir import CommOp
 
 _EPS = 1e-15
@@ -451,6 +452,14 @@ def plan_program(ops: Sequence[CommOp], *, hw=None,
     cfg = managed.get_config()
     hw = hw or cfg.hw
     ops = list(ops)
+    with get_tracer().span("plan.resolve", op="program_plan",
+                           track="plan", n_ops=len(ops)):
+        return _plan_program_body(ops, cfg, hw, stash_cap_bytes,
+                                  max_rounds, notes, log)
+
+
+def _plan_program_body(ops, cfg, hw, stash_cap_bytes, max_rounds, notes,
+                       log) -> ProgramPlan:
     order = sorted(range(len(ops)), key=lambda i: ops[i].key)
     cand_lists = [candidates_for(op, hw) for op in ops]
     sets = contention_sets(ops)

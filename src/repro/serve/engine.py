@@ -46,6 +46,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import cost_model, managed, overlap
 from repro.core.faults import FaultPlan
 from repro.models.model import Model
+from repro.obs.calibrate import Recalibrator
+from repro.obs.tracer import get_tracer
 from repro.parallel.sharding import smap, spec_pspecs
 from repro.serve.kv_cache import (PagedCacheConfig, PagePoolExhausted,
                                   PageTable)
@@ -147,7 +149,11 @@ class ServeEngine:
             if ax is not None)
         self._steps: dict[int, Any] = {}      # chunk -> jitted quantum
         self._rid = 0
-        self._retuned = False
+        # the online-correction trigger (obs.Recalibrator): fire once as
+        # soon as 3 quanta are measured (the historical warmup retune),
+        # then again whenever the per-step seconds drift >25% off the
+        # value the schedule was last resolved against
+        self.recal = Recalibrator(threshold=0.25, warmup=3)
         self._variant_q0 = 0      # quanta index of the variant's window
         self.fault_plan = fault_plan
         self._quantum_idx = 0     # lifetime quantum counter (fault clock)
@@ -295,21 +301,27 @@ class ServeEngine:
         t0 = time.perf_counter()
         host: list[np.ndarray | None] = []
         nbytes = 0
-        for leaf, ax in zip(leaves, axes):
-            if ax is None:
-                host.append(None)
-                continue
-            row_bytes = (int(np.prod(leaf.shape)) // leaf.shape[ax]
-                         * leaf.dtype.itemsize)
-            rpc = self._swap_chunk_rows(row_bytes)
-            parts = [np.asarray(jnp.take(leaf, jnp.asarray(ids[i:i + rpc]),
-                                         axis=ax))
-                     for i in range(0, len(ids), rpc)]
-            empty = leaf.shape[:ax] + (0,) + leaf.shape[ax + 1:]
-            rows = (np.concatenate(parts, axis=ax) if parts else
-                    np.zeros(empty, leaf.dtype))
-            host.append(rows)
-            nbytes += rows.nbytes
+        with get_tracer().span("serve.swap_out", op="preempt_policy",
+                               axis="serve", track="serve",
+                               buffer="kv_pages", slot=slot) as sp:
+            for leaf, ax in zip(leaves, axes):
+                if ax is None:
+                    host.append(None)
+                    continue
+                row_bytes = (int(np.prod(leaf.shape)) // leaf.shape[ax]
+                             * leaf.dtype.itemsize)
+                rpc = self._swap_chunk_rows(row_bytes)
+                parts = [np.asarray(jnp.take(leaf,
+                                             jnp.asarray(ids[i:i + rpc]),
+                                             axis=ax))
+                         for i in range(0, len(ids), rpc)]
+                empty = leaf.shape[:ax] + (0,) + leaf.shape[ax + 1:]
+                rows = (np.concatenate(parts, axis=ax) if parts else
+                        np.zeros(empty, leaf.dtype))
+                host.append(rows)
+                nbytes += rows.nbytes
+            if sp is not None:
+                sp.note(nbytes=nbytes)
         self.metrics.note_swap(nbytes, time.perf_counter() - t0)
         rs = sch.preempt(slot, pt)
         self._swapped[rs.req.rid] = (len(ids), host, rs.consumed,
@@ -336,22 +348,27 @@ class ServeEngine:
         t0 = time.perf_counter()
         nbytes = 0
         out_leaves = []
-        for leaf, ps, rows, ax in zip(leaves, pleaves, host, axes):
-            if rows is None or ax is None or not len(new_ids):
+        with get_tracer().span("serve.swap_in", op="preempt_policy",
+                               axis="serve", track="serve",
+                               buffer="kv_pages", slot=rs.slot) as sp:
+            for leaf, ps, rows, ax in zip(leaves, pleaves, host, axes):
+                if rows is None or ax is None or not len(new_ids):
+                    out_leaves.append(leaf)
+                    continue
+                row_bytes = (int(np.prod(leaf.shape)) // leaf.shape[ax]
+                             * leaf.dtype.itemsize)
+                rpc = self._swap_chunk_rows(row_bytes)
+                pre = (slice(None),) * ax
+                for i in range(0, len(new_ids), rpc):
+                    leaf = leaf.at[pre + (new_ids[i:i + rpc],)].set(
+                        jnp.asarray(rows[pre + (slice(i, i + rpc),)]))
+                leaf = jax.device_put(leaf, NamedSharding(self.mesh, ps))
                 out_leaves.append(leaf)
-                continue
-            row_bytes = (int(np.prod(leaf.shape)) // leaf.shape[ax]
-                         * leaf.dtype.itemsize)
-            rpc = self._swap_chunk_rows(row_bytes)
-            pre = (slice(None),) * ax
-            for i in range(0, len(new_ids), rpc):
-                leaf = leaf.at[pre + (new_ids[i:i + rpc],)].set(
-                    jnp.asarray(rows[pre + (slice(i, i + rpc),)]))
-            leaf = jax.device_put(leaf, NamedSharding(self.mesh, ps))
-            out_leaves.append(leaf)
-            nbytes += rows.nbytes
-        self.cache = jax.tree.unflatten(treedef, out_leaves)
-        jax.block_until_ready(self.cache)
+                nbytes += rows.nbytes
+            self.cache = jax.tree.unflatten(treedef, out_leaves)
+            jax.block_until_ready(self.cache)
+            if sp is not None:
+                sp.note(nbytes=nbytes)
         self.metrics.note_swap(nbytes, time.perf_counter() - t0)
         rs.consumed = consumed
         rs.last_out = last_out
@@ -363,17 +380,21 @@ class ServeEngine:
         requeues as a prompt+generated continuation whose prefill REPLAYS
         the lost KV (greedy decoding keeps the token chain bit-equal)."""
         sch = self.scheduler
-        rs = sch.preempt(slot, self.pt)
-        rid = rs.req.rid
-        cont = sch.continuation(rs)
-        if cont is None:                      # already finished: retire
-            self._retire(rid, rs.generated)
-            return
-        if rs.generated:
-            self._gen_prefix[rid] = (self._gen_prefix.get(rid, [])
-                                     + list(rs.generated))
-        sch.requeue_front(cont)
-        self._hold.add(rid)
+        with get_tracer().span("serve.recompute_evict",
+                               op="preempt_policy", axis="serve",
+                               track="serve", buffer="kv_pages",
+                               slot=slot):
+            rs = sch.preempt(slot, self.pt)
+            rid = rs.req.rid
+            cont = sch.continuation(rs)
+            if cont is None:                  # already finished: retire
+                self._retire(rid, rs.generated)
+                return
+            if rs.generated:
+                self._gen_prefix[rid] = (self._gen_prefix.get(rid, [])
+                                         + list(rs.generated))
+            sch.requeue_front(cont)
+            self._hold.add(rid)
         self.metrics.on_preempt(rid, "recompute")
 
     def _retire(self, rid: int, generated: list[int]) -> None:
@@ -512,17 +533,25 @@ class ServeEngine:
                 # and in-flight state intact for drain()
                 self.fault_plan.serve_quantum(self._quantum_idx)
             self._quantum_idx += 1
+            useful = int(plan.steps.sum())
             t0 = time.perf_counter()
-            out, self.cache = self._step_fn(plan.chunk)(
-                self.params, self.cache, jnp.asarray(self.pt.table),
-                jnp.asarray(plan.tokens), jnp.asarray(plan.n_in),
-                jnp.asarray(plan.pos), jnp.asarray(plan.steps))
-            out_np = np.asarray(out)
+            # scale = useful slot-steps: dur/scale is measured seconds
+            # per token, the unit resolve_serve_schedule predicts
+            with get_tracer().span(
+                    "serve.quantum", op="serve_schedule", axis="serve",
+                    track="serve", chunk=plan.chunk, scale=useful,
+                    quantum=self._quantum_idx - 1, reads="kv_pages"):
+                out, self.cache = self._step_fn(plan.chunk)(
+                    self.params, self.cache, jnp.asarray(self.pt.table),
+                    jnp.asarray(plan.tokens), jnp.asarray(plan.n_in),
+                    jnp.asarray(plan.pos), jnp.asarray(plan.steps))
+                out_np = np.asarray(out)
             wall = time.perf_counter() - t0
             self._hold.clear()    # a quantum dispatched: evictees may
             # re-enter admission on the next planning round
-            self.metrics.note_quantum(wall, plan.chunk,
-                                      int(plan.steps.sum()), self.slots)
+            self.metrics.note_quantum(wall, plan.chunk, useful,
+                                      self.slots)
+            self.recal.note(wall / max(1, plan.chunk))
             for rs in sch.complete_quantum(plan, out_np, self.pt,
                                            self.metrics):
                 self._retire(rs.req.rid, rs.generated)
@@ -551,11 +580,12 @@ class ServeEngine:
         if sch.tuner is not None and sch.tuner_key and tok_s > 0:
             sch.tuner.record(sch.tuner_key, sch.mode, sch.chunk,
                              1.0 / tok_s)
-        if self._schedule != "auto" or self._retuned \
-                or len(self.metrics.quanta) < 3:
+        if self._schedule != "auto" or not self.recal.should_retune():
             return
-        self._retuned = True
         sch.decide(self._n_params, self._dtype_bytes,
                    dtype_str=self.model.cfg.dtype,
                    measured_step_s=self.metrics.step_s_estimate(),
                    measured_dispatch_s=self.metrics.dispatch_s_estimate())
+        # rebase on the measurement EWMA at resolve time; the next
+        # retune needs a further >threshold sustained drift from here
+        self.recal.rebase()

@@ -26,6 +26,8 @@ import dataclasses
 import math
 import time
 
+from repro.obs.registry import MetricsRegistry
+
 
 @dataclasses.dataclass
 class RequestTrace:
@@ -47,14 +49,32 @@ class QuantumRecord:
 
 
 class ServeMetrics:
-    def __init__(self):
+    """Counters and estimators ride the unified ``obs.MetricsRegistry``
+    (one registry per ServeMetrics); the record lists (``quanta``,
+    ``sheds``, ``preempts``) stay — the determinism tests compare their
+    sequences, and the variant-window estimators slice them."""
+
+    def __init__(self, registry: MetricsRegistry | None = None):
         self._t0 = time.perf_counter()
+        self.reg = registry if registry is not None else MetricsRegistry()
         self.quanta: list[QuantumRecord] = []
         self.traces: dict[int, RequestTrace] = {}
         self.sheds: list[tuple[int, str]] = []      # (rid, reason)
         self.preempts: list[tuple[int, str]] = []   # (rid, policy)
-        self.swap_bytes = 0
-        self.swap_s = 0.0
+        self._swap_bytes = self.reg.counter("serve.swap_bytes")
+        self._swap_s = self.reg.counter("serve.swap_s")
+        # "the min is the noise-robust estimator on a shared host"
+        self._step_min = self.reg.extremum("serve.step_s", kind="min")
+        self._quantum_wall = self.reg.histogram("serve.quantum_wall_s")
+
+    # registry-backed counters, exposed under their historical names
+    @property
+    def swap_bytes(self) -> int:
+        return int(self._swap_bytes.value)
+
+    @property
+    def swap_s(self) -> float:
+        return float(self._swap_s.value)
 
     def now(self) -> float:
         return time.perf_counter() - self._t0
@@ -79,22 +99,26 @@ class ServeMetrics:
     def on_shed(self, rid: int, reason: str) -> None:
         """An admission rejection (queue_full / slo / infeasible)."""
         self.sheds.append((rid, reason))
+        self.reg.counter(f"serve.shed.{reason}").add()
 
     def on_preempt(self, rid: int, policy: str) -> None:
         """A preemption event — the (victim, policy) sequence is the
         determinism contract of the overload fault kinds."""
         self.preempts.append((rid, policy))
+        self.reg.counter(f"serve.preempt.{policy}").add()
 
     def note_swap(self, nbytes: int, seconds: float) -> None:
         """One swap transfer leg (D2H or H2D) — accumulates the measured
         PCIe bandwidth that re-prices decide_preempt online."""
-        self.swap_bytes += int(nbytes)
-        self.swap_s += float(seconds)
+        self._swap_bytes.add(int(nbytes))
+        self._swap_s.add(float(seconds))
 
     def note_quantum(self, wall_s: float, chunk: int, useful_steps: int,
                      slots: int) -> None:
         self.quanta.append(QuantumRecord(wall_s, chunk, useful_steps,
                                          slots))
+        self._step_min.observe(wall_s / max(1, chunk))
+        self._quantum_wall.observe(wall_s)
 
     def rebase_pending(self) -> None:
         """Move not-yet-served requests' submit times to 'now' — called
@@ -107,12 +131,11 @@ class ServeMetrics:
     # -- estimates fed back into the cost model ------------------------------
 
     def step_s_estimate(self) -> float | None:
-        """Per-engine-step seconds (whole batch): min over quanta of
-        wall/C — the min is the noise-robust estimator on a shared host
-        and absorbs the least dispatch overhead."""
-        if not self.quanta:
-            return None
-        return min(q.wall_s / max(1, q.chunk) for q in self.quanta)
+        """Per-engine-step seconds (whole batch): running min over quanta
+        of wall/C (an ``obs.registry.Extremum``) — the min is the
+        noise-robust estimator on a shared host and absorbs the least
+        dispatch overhead."""
+        return self._step_min.value
 
     def dispatch_s_estimate(self) -> float | None:
         """Per-quantum overhead left after charging C * step_s."""

@@ -37,6 +37,8 @@ from repro.data.pipeline import SyntheticLMData
 from repro.models import layers as model_layers
 from repro.models import transformer
 from repro.models.model import Model
+from repro.obs.calibrate import Recalibrator
+from repro.obs.tracer import get_tracer
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.parallel import compression
 from repro.parallel import pipeline as pipe
@@ -355,6 +357,12 @@ class TrainLoop:
                                               keep=loop_cfg.keep,
                                               metrics=self.ckpt_metrics)
         self.ckpt_interval = max(1, loop_cfg.ckpt_every)
+        # the step-time EWMA + the cadence re-resolution trigger, now the
+        # shared obs.Recalibrator policy (warmup=1: resolve from the very
+        # first post-warmup measurement, then on >25% sustained drift —
+        # exactly the trigger the loop used to hand-roll inline)
+        self.recal = Recalibrator(threshold=0.25, warmup=1,
+                                  alpha=loop_cfg.ewma)
         self.ckpt_decisions: list = []       # CheckpointDecision trail
         self.replayed: list[dict] = []       # elastic replan records
         self._resolved_step_s: float | None = None
@@ -435,6 +443,7 @@ class TrainLoop:
         self.ckpt_interval = max(1, int(d.interval))
         self.ckpt_decisions.append(d)
         self._resolved_step_s = step_s
+        self.recal.rebase(step_s)
         # re-meter the async drain's D2H chunking to the current step time
         self.mgr.drain_chunk_bytes = overlap.drain_chunk_bytes(
             step_s, d.write_bw)
@@ -466,9 +475,9 @@ class TrainLoop:
 
     def run(self, params: Any, opt: Any, start_step: int = 0) -> dict:
         cfg = self.cfg
+        tr = get_tracer()
         step = start_step
         retries = 0
-        ewma_t: float | None = None
         warmup_until = start_step + 2
         last_saved = start_step
         steps_executed = 0
@@ -483,8 +492,12 @@ class TrainLoop:
             try:
                 if self.fault_hook is not None:
                     self.fault_hook(step)
-                params, opt, metrics = self.step_fn(params, opt, batch)
-                loss = float(metrics["loss"])
+                with tr.span("train.step", track="compute", step=step):
+                    params, opt, metrics = self.step_fn(params, opt,
+                                                        batch)
+                    # float() blocks on the device — the span measures
+                    # the realized step, not the dispatch
+                    loss = float(metrics["loss"])
                 if not np.isfinite(loss):
                     raise FloatingPointError(f"non-finite loss at {step}")
             except Exception as e:          # noqa: BLE001 — restart path
@@ -504,26 +517,29 @@ class TrainLoop:
             steps_executed += 1
             dt = time.monotonic() - t0
             in_warmup = step < warmup_until
+            ewma_t = self.recal.value
             if (not in_warmup and ewma_t is not None
                     and dt > cfg.straggler_factor * ewma_t):
                 self.stragglers.append(step)
-            if in_warmup:
-                pass      # (re)compile steps: neither EWMA nor straggler
-            elif ewma_t is None:
-                ewma_t = dt
-            else:
-                ewma_t = cfg.ewma * ewma_t + (1 - cfg.ewma) * dt
+            if not in_warmup:
+                # (re)compile steps feed neither EWMA nor straggler
+                self.recal.note(dt)
             self.history.append({"step": step, "loss": loss,
                                  "time_s": dt})
-            if cfg.managed_cadence and ewma_t is not None and (
-                    self._resolved_step_s is None
-                    or abs(ewma_t - self._resolved_step_s)
-                    > 0.25 * self._resolved_step_s):
-                self._resolve_cadence(ewma_t, snapshot_bytes)
+            if cfg.managed_cadence and self.recal.should_retune():
+                self._resolve_cadence(self.recal.value, snapshot_bytes)
             step += 1
             if step - last_saved >= self.ckpt_interval \
                     or step == cfg.total_steps:
-                self._save(step, params, opt)
+                # scale = the train seconds this cadence amortizes one
+                # checkpoint over, so dur/scale is the measured overhead
+                # fraction — the unit resolve_checkpoint predicts
+                with tr.span("ckpt.save", op="ckpt_interval",
+                             axis=self._mesh_axis, track="ckpt",
+                             nbytes=snapshot_bytes,
+                             scale=self.ckpt_interval
+                             * max(self.recal.value or dt, 1e-9)):
+                    self._save(step, params, opt)
                 last_saved = step
         self.mgr.wait()
         return {"params": params, "opt": opt, "step": step,
